@@ -1,0 +1,66 @@
+"""Benchmark: reproduce paper Fig. 2 (a: IPC, b: power, c: speedup+energy).
+
+Runs the dual-issue timing model and the component energy model over all six
+kernels (baseline vs COPIFT at each kernel's Table-I max block) and prints
+the per-kernel metrics plus the headline aggregates the paper reports.
+"""
+
+from __future__ import annotations
+
+from repro.core.analytics import PAPER_HEADLINE, TABLE_I, geomean
+from repro.core.energy import evaluate_energy
+from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
+from repro.core.timing import evaluate_kernel
+
+
+def generate() -> tuple[list[dict], dict]:
+    rows = []
+    for name in KERNELS:
+        perf = evaluate_kernel(name, baseline_trace(name),
+                               copift_schedule(name), TABLE_I[name].max_block)
+        en = evaluate_energy(name)
+        rows.append(dict(
+            kernel=name,
+            ipc_base=round(perf.ipc_base, 3),
+            ipc_copift=round(perf.ipc_copift, 3),
+            ipc_gain=round(perf.ipc_gain, 3),
+            i_prime=round(TABLE_I[name].i_prime, 3),
+            speedup=round(perf.speedup, 3),
+            s_prime=round(TABLE_I[name].s_prime, 3),
+            power_base_mw=round(en.power_base_mw, 2),
+            power_copift_mw=round(en.power_copift_mw, 2),
+            power_ratio=round(en.power_ratio, 3),
+            energy_saving=round(en.energy_saving, 3),
+        ))
+    agg = dict(
+        geomean_speedup=round(geomean([r["speedup"] for r in rows]), 3),
+        peak_speedup=round(max(r["speedup"] for r in rows), 3),
+        peak_ipc=round(max(r["ipc_copift"] for r in rows), 3),
+        geomean_ipc_gain=round(geomean([r["ipc_gain"] for r in rows]), 3),
+        geomean_power_ratio=round(geomean([r["power_ratio"] for r in rows]), 3),
+        max_power_ratio=round(max(r["power_ratio"] for r in rows), 3),
+        geomean_energy_saving=round(
+            geomean([r["energy_saving"] for r in rows]), 3),
+        peak_energy_saving=round(max(r["energy_saving"] for r in rows), 3),
+    )
+    return rows, agg
+
+
+def run() -> list[str]:
+    rows, agg = generate()
+    lines = ["fig2.kernel,ipc_base,ipc_copift,ipc_gain,I',speedup,S',"
+             "power_base_mw,power_copift_mw,power_ratio,energy_saving"]
+    for r in rows:
+        lines.append(
+            f"fig2.{r['kernel']},{r['ipc_base']},{r['ipc_copift']},"
+            f"{r['ipc_gain']},{r['i_prime']},{r['speedup']},{r['s_prime']},"
+            f"{r['power_base_mw']},{r['power_copift_mw']},{r['power_ratio']},"
+            f"{r['energy_saving']}")
+    lines.append("fig2.aggregate,metric,model,paper")
+    for key, paper in PAPER_HEADLINE.items():
+        lines.append(f"fig2.aggregate,{key},{agg[key]},{paper}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

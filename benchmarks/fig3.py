@@ -1,0 +1,54 @@
+"""Benchmark: reproduce paper Fig. 3 — poly_lcg IPC vs problem size × block
+size, including the ">99.5%" amortization points and per-problem-size "peak"
+block annotations."""
+
+from __future__ import annotations
+
+from repro.core.analytics import TABLE_I
+from repro.core.kernels_isa import copift_schedule
+from repro.core.timing import copift_block_timing, copift_problem_timing
+
+BLOCKS = (32, 64, 128, 256, 341)           # 341 = Table I max block
+PROBLEMS = tuple(1 << p for p in range(7, 19, 2))   # 128 .. 262144
+
+
+def generate() -> dict:
+    sched = copift_schedule("poly_lcg")
+    surface = {}
+    for b in BLOCKS:
+        for n in PROBLEMS:
+            if b > n:
+                continue
+            surface[(n, b)] = copift_problem_timing(sched, n, b).ipc
+    # ">99.5%" markers: smallest problem reaching 99.5% of the block's max.
+    markers = {}
+    for b in BLOCKS:
+        peak = max(v for (n, bb), v in surface.items() if bb == b)
+        for n in PROBLEMS:
+            if (n, b) in surface and surface[(n, b)] >= 0.995 * peak:
+                markers[b] = n
+                break
+    # "peak" block per problem size.
+    peaks = {}
+    for n in PROBLEMS:
+        cands = {b: surface[(n, b)] for b in BLOCKS if (n, b) in surface}
+        peaks[n] = max(cands, key=cands.get)
+    steady = copift_block_timing(sched, TABLE_I["poly_lcg"].max_block).ipc
+    return dict(surface=surface, markers=markers, peaks=peaks, steady=steady)
+
+
+def run() -> list[str]:
+    data = generate()
+    lines = ["fig3.problem,block,ipc"]
+    for (n, b), v in sorted(data["surface"].items()):
+        lines.append(f"fig3.{n},{b},{round(v, 4)}")
+    for b, n in sorted(data["markers"].items()):
+        lines.append(f"fig3.amortized_99_5,block={b},problem={n}")
+    for n, b in sorted(data["peaks"].items()):
+        lines.append(f"fig3.peak_block,problem={n},block={b}")
+    lines.append(f"fig3.steady_state_ipc,max_block,{round(data['steady'], 4)}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

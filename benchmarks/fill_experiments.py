@@ -1,0 +1,101 @@
+"""Regenerate the §Dry-run and §Roofline tables inside EXPERIMENTS.md from
+the artifacts in experiments/dryrun/ (idempotent; keeps §Perf text)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import analyze_record, DRYRUN_DIR
+
+EXP_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+ARCH_ORDER = ["olmo-1b", "phi3-mini-3.8b", "qwen3-32b", "gemma-2b",
+              "deepseek-moe-16b", "grok-1-314b", "hubert-xlarge",
+              "rwkv6-1.6b", "jamba-v0.1-52b", "qwen2-vl-72b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(rec):
+    return (ARCH_ORDER.index(rec["arch"]), SHAPE_ORDER.index(rec["shape"]))
+
+
+def dryrun_table() -> str:
+    recs = []
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    pod = sorted([r for r in recs if r["mesh"] == "pod"], key=_key)
+    multi = {(r["arch"], r["shape"]): r for r in recs
+             if r["mesh"] == "multipod"}
+    lines = [
+        "| arch | shape | mem/dev (GiB) pod | mem/dev multipod | collective "
+        "B/dev pod | compile s (pod/multi) | EP | FSDP |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in pod:
+        m = multi.get((r["arch"], r["shape"]))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['total_bytes']/2**30:.2f} "
+            f"| {m['memory']['total_bytes']/2**30:.2f} " if m else "| — "
+        )
+        # rebuild properly (f-string branching above is error-prone):
+        lines.pop()
+        mm = f"{m['memory']['total_bytes']/2**30:.2f}" if m else "—"
+        cs = f"{r['compile_s']:.0f}/{m['compile_s']:.0f}" if m else \
+            f"{r['compile_s']:.0f}/—"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['total_bytes']/2**30:.2f} | {mm} "
+            f"| {r['collectives']['total_bytes']:.2e} | {cs} "
+            f"| {'✓' if r['ep'] else '—'} | {'✓' if r['fsdp'] else '—'} |")
+    n_pod, n_multi = len(pod), len(multi)
+    lines.append(f"\n{n_pod} pod cells + {n_multi} multi-pod cells "
+                 "compiled successfully.")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    recs = []
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec["mesh"] != "pod":
+            continue
+        recs.append(analyze_record(rec))
+    recs.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
+                             SHAPE_ORDER.index(r["shape"])))
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful | roofline frac | fits 16 GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_frac']:.3f} "
+            f"| {'✓' if r['fits_hbm'] else '✗'} |")
+    return "\n".join(lines)
+
+
+def fill():
+    with open(EXP_MD) as f:
+        md = f.read()
+    md = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## )",
+                "<!-- DRYRUN_TABLE -->\n" + dryrun_table() + "\n\n",
+                md, flags=re.S)
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+                "<!-- ROOFLINE_TABLE -->\n" + roofline_table() + "\n\n",
+                md, flags=re.S)
+    with open(EXP_MD, "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    fill()

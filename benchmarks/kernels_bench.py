@@ -1,0 +1,70 @@
+"""Benchmark: wall-time of the jit'd kernels on this host (µs/call).
+
+CPU numbers are *relative* sanity only (TPU is the target); the derived
+column reports throughput (Gelem/s) for the elementwise kernels and
+Msamples/s for the Monte-Carlo estimators.  The reference (pure-jnp) path is
+timed — it is the XLA-compiled production fallback; interpret-mode Pallas
+timing would measure the interpreter, not the kernel.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+N = 1 << 20
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args).block_until_ready()          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def run() -> list[str]:
+    lines = []
+    x = jnp.asarray(np.random.default_rng(0).uniform(-10, 10, (N,)), jnp.float32)
+    xp = jnp.abs(x) + jnp.float32(1e-3)
+
+    us = _time(jax.jit(lambda a: ops.exp(a, impl="reference")), x)
+    lines.append(f"kernels.exp_ref,{us:.1f},{N / us / 1e3:.2f}Gelem/s")
+    us = _time(jax.jit(lambda a: jnp.exp(a)), x)
+    lines.append(f"kernels.exp_xla,{us:.1f},{N / us / 1e3:.2f}Gelem/s")
+    us = _time(jax.jit(lambda a: ops.log(a, impl="reference")), xp)
+    lines.append(f"kernels.log_ref,{us:.1f},{N / us / 1e3:.2f}Gelem/s")
+    us = _time(jax.jit(lambda a: jnp.log(a)), xp)
+    lines.append(f"kernels.log_xla,{us:.1f},{N / us / 1e3:.2f}Gelem/s")
+
+    sm = jnp.asarray(np.random.default_rng(1).normal(0, 3, (512, 2048)),
+                     jnp.float32)
+    us = _time(jax.jit(lambda a: ops.softmax(a, impl="reference")), sm)
+    lines.append(f"kernels.softmax_ref,{us:.1f},{sm.size / us / 1e3:.2f}Gelem/s")
+    us = _time(jax.jit(lambda a: jax.nn.softmax(a, axis=-1)), sm)
+    lines.append(f"kernels.softmax_xla,{us:.1f},{sm.size / us / 1e3:.2f}Gelem/s")
+
+    for kind in ("lcg", "xoshiro128p"):
+        us = _time(jax.jit(lambda s, k=kind: ops.uniform(s, (N,), kind=k,
+                                                         impl="reference")),
+                   jnp.uint32(1))
+        lines.append(f"kernels.uniform_{kind},{us:.1f},{N / us / 1e3:.2f}Gelem/s")
+
+    ns = 1 << 20
+    for kind in ("lcg", "xoshiro128p"):
+        for problem, fn in (("pi", ops.mc_pi), ("poly", ops.mc_poly)):
+            us = _time(lambda s, k=kind, f=fn: f(int(s), ns, kind=k,
+                                                 impl="reference"), 3)
+            lines.append(f"kernels.mc_{problem}_{kind},{us:.1f},"
+                         f"{ns / us:.2f}Msamples/s")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

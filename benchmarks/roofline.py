@@ -1,0 +1,101 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, the three roofline terms:
+
+    compute    = FLOPs_per_device / 197e12          (bf16 peak, TPU v5e)
+    memory     = HBM_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9 (ICI link)
+
+Sources: collective bytes come from the trip-count-aware HLO parse stored
+by the dry-run; FLOPs/HBM bytes come from the analytic cost model
+(benchmarks/costmodel.py) because ``compiled.cost_analysis()`` counts scan
+bodies once (verified; raw values are still recorded in the artifacts and
+reported here as ``hlo_raw_flops`` for transparency).
+
+Also reported: MODEL_FLOPS = 6·N·D (6·N_active·D for MoE; 2·N·D for the
+serve cells), the useful-compute ratio MODEL_FLOPS / executed FLOPs (catches
+remat/masked-chunk/capacity waste), and the roofline fraction
+(useful FLOP/s under the dominant bound ÷ peak).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.costmodel import step_cost
+from repro.configs import SHAPES, load_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(rec: dict, shape) -> float:
+    n = rec["n_active_params"]
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens / rec["devices"]
+
+
+def analyze_record(rec: dict) -> dict:
+    shape = SHAPES[rec["shape"]]
+    cfg = load_config(rec["arch"], "full")
+    cost = step_cost(cfg, shape, rec["devices"])
+    t_compute = cost.flops / PEAK_FLOPS
+    t_memory = cost.hbm_bytes / HBM_BW
+    t_coll = rec["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec, shape)
+    bound = max(terms.values())
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=t_compute, memory_s=t_memory, collective_s=t_coll,
+        dominant=dominant, model_flops=mf, exec_flops=cost.flops,
+        hlo_raw_flops=rec["cost"]["flops"],
+        useful_ratio=mf / cost.flops if cost.flops else 0.0,
+        roofline_frac=(mf / bound) / PEAK_FLOPS if bound else 0.0,
+        mem_gib=rec["memory"]["total_bytes"] / 2**30,
+        fits_hbm=rec["memory"]["total_bytes"] < 16 * 2**30,
+        coll_counts=rec["collectives"]["counts"])
+
+
+def load_all(mesh: str | None = None) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec["mesh"] != mesh:
+            continue
+        out.append(analyze_record(rec))
+    return out
+
+
+def run() -> list[str]:
+    rows = load_all(mesh="pod")        # the roofline table is single-pod
+    if not rows:
+        raise FileNotFoundError(
+            f"no dry-run artifacts in {DRYRUN_DIR}; run "
+            "`python -m repro.launch.dryrun --all` first")
+    lines = ["roofline.arch,shape,compute_s,memory_s,collective_s,dominant,"
+             "useful_ratio,roofline_frac,mem_gib,fits_hbm"]
+    for r in rows:
+        lines.append(
+            f"roofline.{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+            f"{r['memory_s']:.4f},{r['collective_s']:.4f},{r['dominant']},"
+            f"{r['useful_ratio']:.3f},{r['roofline_frac']:.3f},"
+            f"{r['mem_gib']:.2f},{r['fits_hbm']}")
+    multi = load_all(mesh="multipod")
+    lines.append(f"roofline.multipod_cells_compiled,{len(multi)},"
+                 f"{sum(1 for r in multi if r['fits_hbm'])}_fit_hbm")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

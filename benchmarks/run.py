@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV lines:
+  * table1.*       — paper Table I regenerated from our kernel transcriptions
+  * fig2.*         — IPC / power / speedup / energy, baseline vs COPIFT
+  * fig3.*         — poly_lcg IPC over problem × block sizes
+  * kernels.*      — wall-time µs/call of the jit'd kernels on this host
+  * roofline.*     — TPU v5e roofline terms from the dry-run artifacts
+                     (skipped with a notice until launch/dryrun.py has run)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fig2, fig3, kernels_bench, table1
+    sections = [
+        ("table1", table1.run),
+        ("fig2", fig2.run),
+        ("fig3", fig3.run),
+        ("kernels", kernels_bench.run),
+    ]
+    try:
+        from benchmarks import roofline
+        sections.append(("roofline", roofline.run))
+    except ImportError:
+        pass
+    failures = []
+    for name, fn in sections:
+        try:
+            for line in fn():
+                print(line)
+        except FileNotFoundError as e:
+            print(f"{name}.skipped,missing_artifact,{e}")
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"benchmarks.failed,{','.join(failures)},")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

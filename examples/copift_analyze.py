@@ -1,0 +1,52 @@
+"""The COPIFT analyzer applied across the framework: partition the paper's
+six kernels AND this repo's own model computations into int/fp phases and
+report Eq. 1–3 dual-issue predictions.
+
+Run:  PYTHONPATH=src python examples/copift_analyze.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.configs import load_config
+from repro.core.kernels_isa import KERNELS, baseline_trace
+from repro.kernels import ref
+from repro.models.model import loss_fn
+
+
+def show(name, a: core.Analysis):
+    print(f"{name:28s} int={a.n_int:4d} fp={a.n_fp:4d} mem={a.n_mem:4d} "
+          f"phases={a.n_phases} cuts={a.n_cut_edges:3d} "
+          f"TI={a.thread_imbalance:.2f} S''={a.predicted_speedup:.2f}")
+
+
+def main():
+    print("— paper kernels (instruction-level DFGs) —")
+    for k in KERNELS:
+        part = core.partition(core.build_dfg(baseline_trace(k)))
+        doms = "".join(p.domain.value[0] for p in part.phases)
+        print(f"{k:28s} phases={doms} cross-cuts={part.n_cross_cuts}")
+
+    print("\n— jaxpr-level analysis (the same Steps 1-2 on real JAX code) —")
+    x = jnp.linspace(0.1, 5.0, 256, dtype=jnp.float32)
+    show("kernels.ref.exp_ref", core.analyze(ref.exp_ref, x))
+    show("kernels.ref.log_ref", core.analyze(ref.log_ref, x))
+    show("kernels.ref.softmax_ref",
+         core.analyze(ref.softmax_ref, x.reshape(16, 16)))
+
+    cfg = load_config("olmo-1b", "smoke")
+    params = jax.eval_shape(
+        lambda: __import__("repro.models.model", fromlist=["init_params"])
+        .init_params(cfg, jax.random.PRNGKey(0)))
+    batch = {"tokens": jnp.zeros((2, 32), jnp.int32)}
+    a = core.analyze(lambda p, b: loss_fn(p, cfg, b)[0], params, batch)
+    show("olmo-1b loss_fn (train)", a)
+    print("\nInterpretation: a transformer loss is FP-dominated (TI → 0), so"
+          "\nCOPIFT's win concentrates in its mixed int/fp corners — softmax"
+          "\nexp (bit-assembled scales), PRNG-driven data/sampling paths —"
+          "\nexactly the kernels this repo accelerates.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Serving example: batched prefill + decode with the KV-cache engine,
+sampling through the paper's xoshiro128+ kernel.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.configs import load_config
+from repro.models.model import init_params
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = load_config("gemma-2b", "smoke")
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    engine = ServeEngine(cfg, params, max_len=96, batch=4, temperature=0.8,
+                         seed=11)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 16)).astype(np.int32)
+    result = engine.generate(prompts, n_steps=48)
+    print("generated shape:", result.tokens.shape)
+    for b in range(2):
+        print(f"seq {b}:", result.tokens[b, 16:32], "...")
+    # Greedy vs sampled differ:
+    engine_greedy = ServeEngine(cfg, params, max_len=96, batch=4,
+                                temperature=0.0)
+    r2 = engine_greedy.generate(prompts, n_steps=48)
+    print("sampled != greedy:",
+          bool((result.tokens != r2.tokens).any()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-param OLMo-family model for a few
+hundred steps on the deterministic xoshiro128+ pipeline, with async
+checkpointing and crash-resume (kill it mid-run and re-run — it resumes).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The loss falls from ~ln(50304)≈10.8 toward the sticky-stream entropy floor
+(≈0.1·lnV + H(0.9) ≈ 1.4) as the model learns the synthetic structure.
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import load_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.model import init_params
+from repro.train.fault import CheckpointManager
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: the OLMo family at width 512 / 8 layers.
+    cfg = load_config("olmo-1b", "smoke").replace(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, d_head=64,
+        d_ff=2048, vocab_size=50304, layer_types="a" * 8)
+    print(f"training olmo-mini: {cfg.n_params()/1e6:.0f}M params")
+
+    shape = ShapeConfig("ex", args.seq, args.batch, "train")
+    pipe = TokenPipeline(cfg, shape, PipelineConfig(seed=7))
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=args.steps,
+                          warmup_steps=args.steps // 10)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    mgr = CheckpointManager(args.ckpt_dir)
+    init_fn = lambda: init_train_state(
+        cfg, init_params(cfg, jax.random.PRNGKey(0)))
+    state, start = mgr.restore_or_init(jax.eval_shape(init_fn), init_fn)
+    if start:
+        print(f"[resume] from step {start}")
+
+    losses = []
+    for step in range(start, args.steps):
+        t0 = time.time()
+        state, metrics = step_fn(state, pipe.host_batch_at(step))
+        losses.append(float(metrics["loss"]))
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={losses[-1]:.4f} "
+                  f"({(time.time()-t0)*1e3:.0f} ms)", flush=True)
+        if (step + 1) % 50 == 0:
+            mgr.save(step + 1, state)
+    mgr.save(args.steps, state)
+    mgr.wait()
+    if len(losses) > 100:
+        assert losses[-1] < losses[0], "no learning?"
+    print(f"loss {losses[0]:.3f} → {losses[-1]:.3f} ✓")
+
+
+if __name__ == "__main__":
+    main()

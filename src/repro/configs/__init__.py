@@ -1,0 +1,10 @@
+"""Architecture configs: one public-literature config per assigned arch
+(see registry.py) + per-arch module files for --arch discovery."""
+
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig,
+                                ShapeConfig, SHAPES, applicable_shapes)
+from repro.configs.registry import ARCHS, FULL_CONFIGS, load_config, smoke
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+           "applicable_shapes", "ARCHS", "FULL_CONFIGS", "load_config",
+           "smoke"]

@@ -1,0 +1,6 @@
+"""--arch config module (see registry.py for the dimension table and source citation)."""
+
+from repro.configs.registry import DEEPSEEK_MOE_16B as CONFIG
+from repro.configs.registry import smoke as _smoke
+
+SMOKE = _smoke(CONFIG.name)

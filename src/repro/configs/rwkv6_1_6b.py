@@ -1,0 +1,6 @@
+"""--arch config module (see registry.py for the dimension table and source citation)."""
+
+from repro.configs.registry import RWKV6_1B6 as CONFIG
+from repro.configs.registry import smoke as _smoke
+
+SMOKE = _smoke(CONFIG.name)

@@ -1,0 +1,45 @@
+"""COPIFT — the paper's primary contribution, as executable machinery.
+
+Layer map (paper §II-A steps → modules):
+
+* Step 1    ``dfg``        — DFG construction + int/fp/mem classification
+  (front-ends: RISC-V traces for the paper's kernels, jaxprs for any JAX fn)
+* Steps 2–3 ``partition``  — acyclic min-cut phase partitioning + reorder
+* Steps 4–5 ``schedule``   — loop tiling, fission, software pipelining,
+  multi-buffering (replicas = phase distance + 1)
+* Steps 6–7 ``streams``    — SSR affine streams, stream fusion, ISSR
+* §II-B     ``isa``        — RV32G/FREP/SSR model + COPIFT custom-1 opcodes
+* Eq. 1–3   ``analytics``  — TI, S′, S″, I′ + Table I
+* §III      ``timing``     — dual-issue discrete-event model (Fig. 2a, 3)
+* §III-B    ``energy``     — component power model (Fig. 2b/2c)
+* API       ``copift``     — ``analyze()`` + executable block plans
+"""
+
+from repro.core.analytics import (PAPER_HEADLINE, TABLE_I, KernelCounts,
+                                  geomean, table_rows)
+from repro.core.copift import (Analysis, CopiftPlan, PhaseDef, analyze,
+                               choose_block, execute, make_plan)
+from repro.core.dfg import build_dfg, cross_edges, domain_counts, jaxpr_dfg
+from repro.core.isa import DepType, Domain, Instr, KernelTrace
+from repro.core.partition import Partition, Phase, partition, reorder
+from repro.core.schedule import (BufferSpec, PhaseProgram, PipelinePlan,
+                                 max_block, plan_from_partition, run_pipelined,
+                                 run_serial)
+from repro.core.streams import (AffineStream, IndirectStream, allocate_ssrs,
+                                fuse, stage_type1_to_type2)
+from repro.core.timing import (BlockTiming, CopiftSchedule, KernelResult,
+                               copift_block_timing, copift_problem_timing,
+                               evaluate_kernel, ipc_surface)
+
+__all__ = [
+    "PAPER_HEADLINE", "TABLE_I", "KernelCounts", "geomean", "table_rows",
+    "Analysis", "CopiftPlan", "PhaseDef", "analyze", "choose_block",
+    "execute", "make_plan", "build_dfg", "cross_edges", "domain_counts",
+    "jaxpr_dfg", "DepType", "Domain", "Instr", "KernelTrace", "Partition",
+    "Phase", "partition", "reorder", "BufferSpec", "PhaseProgram",
+    "PipelinePlan", "max_block", "plan_from_partition", "run_pipelined",
+    "run_serial", "AffineStream", "IndirectStream", "allocate_ssrs", "fuse",
+    "stage_type1_to_type2", "BlockTiming", "CopiftSchedule", "KernelResult",
+    "copift_block_timing", "copift_problem_timing", "evaluate_kernel",
+    "ipc_surface",
+]

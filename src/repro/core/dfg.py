@@ -1,0 +1,180 @@
+"""COPIFT Step 1 — data-flow graph construction and dependency typing.
+
+Two front-ends produce the same graph format:
+
+* :func:`build_dfg` — from an explicit :class:`~repro.core.isa.KernelTrace`
+  (RISC-V-level model, used for the paper's six kernels and Table I).
+* :func:`jaxpr_dfg` — from any traced JAX function.  Each jaxpr equation
+  becomes a node classified into the int / fp / mem / ctrl domain by its
+  primitive and output dtype.  This is what makes the methodology executable
+  on real workloads (``repro.api.analyze``): the same partitioner that
+  schedules the paper's expf kernel partitions a transformer's train_step.
+
+Graph format: ``networkx.DiGraph`` whose nodes carry
+``domain`` (:class:`~repro.core.isa.Domain`), ``opcode``, ``weight``
+(instruction/op count the node stands for) and whose edges carry
+``dep`` (:class:`~repro.core.isa.DepType`).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import networkx as nx
+
+from repro.core.isa import DepType, Domain, Instr, KernelTrace, MEM_OPS, XRF_FP_OPS
+
+
+# ---------------------------------------------------------------------------
+# Front-end 1: RISC-V instruction traces
+# ---------------------------------------------------------------------------
+
+def _reg_bank(name: str) -> str:
+    return "fp" if name.removeprefix("loop:").startswith("f") else "int"
+
+
+def build_dfg(trace: KernelTrace) -> nx.DiGraph:
+    """Construct the DFG of a straight-line trace (paper Fig. 1c).
+
+    Nodes are instruction indices.  An edge u→v is added when v consumes a
+    register or memory location last produced by u.  Cross-domain edges are
+    typed per the paper: Type 1 (dynamic mem), Type 2 (static mem),
+    Type 3 (register traffic through cross-RF FP instructions).
+    """
+    g = nx.DiGraph(name=trace.name)
+    last_writer: dict[str, int] = {}
+
+    for idx, ins in enumerate(trace.instrs):
+        g.add_node(idx, opcode=ins.opcode, domain=_node_domain(ins), weight=1,
+                   instr=ins)
+        for src in ins.srcs:
+            if src in last_writer:
+                u = idx_src = last_writer[src]
+                g.add_edge(u, idx, dep=_edge_type(trace.instrs[idx_src], ins, src))
+        if ins.dst is not None:
+            last_writer[ins.dst] = idx
+    return g
+
+
+def _node_domain(ins: Instr) -> Domain:
+    """Assign memory ops to the thread that issues them."""
+    if ins.domain is Domain.MEM:
+        return Domain.FP if ins.is_fp_mem else Domain.INT
+    if ins.domain is Domain.CTRL:
+        return Domain.INT
+    return ins.domain
+
+
+def _edge_type(producer: Instr, consumer: Instr, via: str) -> DepType:
+    pd, cd = _node_domain(producer), _node_domain(consumer)
+    if pd == cd:
+        return DepType.INTRA
+    # FP load/store consuming an integer-computed address → memory dependency.
+    if consumer.opcode in MEM_OPS and MEM_OPS[consumer.opcode]["fp"]:
+        return DepType.DYN_MEM if consumer.dyn_addr else DepType.STA_MEM
+    if producer.opcode in MEM_OPS and MEM_OPS[producer.opcode]["fp"]:
+        return DepType.DYN_MEM if producer.dyn_addr else DepType.STA_MEM
+    # Cross-RF FP instruction (fcvt / fmv / fcmp) → register dependency.
+    if producer.opcode in XRF_FP_OPS or consumer.opcode in XRF_FP_OPS:
+        return DepType.REG
+    # Values flowing through memory cells tagged mem:* keep memory semantics.
+    if via.startswith("mem:"):
+        return DepType.STA_MEM
+    return DepType.REG
+
+
+def cross_edges(g: nx.DiGraph) -> list[tuple[int, int, DepType]]:
+    """All int↔fp edges with their paper dependency type."""
+    out = []
+    for u, v, data in g.edges(data=True):
+        du, dv = g.nodes[u]["domain"], g.nodes[v]["domain"]
+        if {du, dv} == {Domain.INT, Domain.FP}:
+            out.append((u, v, data["dep"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Front-end 2: jaxprs
+# ---------------------------------------------------------------------------
+
+#: Primitives that occupy the integer/control domain regardless of dtype.
+_INT_PRIMS = {
+    "and", "or", "xor", "not", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "population_count", "clz",
+    "iota", "argmax", "argmin", "sort", "top_k", "rem",
+}
+#: Primitives that are pure data movement (mem domain).
+_MEM_PRIMS = {
+    "gather", "scatter", "scatter-add", "scatter_add", "dynamic_slice",
+    "dynamic_update_slice", "slice", "concatenate", "broadcast_in_dim",
+    "reshape", "transpose", "squeeze", "rev", "pad", "copy",
+}
+_CTRL_PRIMS = {"while", "cond", "scan", "pjit", "custom_jvp_call",
+               "custom_vjp_call", "remat", "checkpoint", "custom_vjp_call_jaxpr"}
+
+
+def _prim_domain(eqn) -> Domain:
+    name = eqn.primitive.name
+    if name in _MEM_PRIMS:
+        return Domain.MEM
+    if name in _CTRL_PRIMS:
+        return Domain.CTRL
+    if name in _INT_PRIMS:
+        return Domain.INT
+    # Otherwise classify by the output dtype: float/complex → FP domain,
+    # integer/bool → INT domain.  convert_element_type with a domain change is
+    # the jaxpr analogue of fcvt (a Type-3 edge source/sink).
+    dt = eqn.outvars[0].aval.dtype if eqn.outvars and hasattr(eqn.outvars[0], "aval") else None
+    if dt is not None and (dt.kind in "fc"):
+        return Domain.FP
+    return Domain.INT
+
+
+def jaxpr_dfg(fn: Callable, *example_args: Any, **kw) -> nx.DiGraph:
+    """Trace ``fn`` and build the COPIFT DFG of its (flat) jaxpr."""
+    closed = jax.make_jaxpr(fn, **kw)(*example_args)
+    return _jaxpr_graph(closed.jaxpr)
+
+
+def _jaxpr_graph(jaxpr) -> nx.DiGraph:
+    g = nx.DiGraph()
+    producer: dict[Any, int] = {}
+    for idx, eqn in enumerate(jaxpr.eqns):
+        dom = _prim_domain(eqn)
+        g.add_node(idx, opcode=eqn.primitive.name, domain=dom, weight=1,
+                   eqn=eqn)
+        for invar in eqn.invars:
+            key = id(invar)
+            if key in producer:
+                u = producer[key]
+                du = g.nodes[u]["domain"]
+                if {du, dom} == {Domain.INT, Domain.FP}:
+                    # convert_element_type / comparisons crossing domains are
+                    # register (Type-3) dependencies; gathers with computed
+                    # indices are Type-1; everything else through arrays that
+                    # persist is Type-2.
+                    name = eqn.primitive.name
+                    pname = g.nodes[u]["opcode"]
+                    if name in ("convert_element_type", "sign") or \
+                       pname in ("convert_element_type",) or \
+                       name in ("lt", "le", "eq", "ge", "gt", "ne") or \
+                       pname in ("lt", "le", "eq", "ge", "gt", "ne"):
+                        dep = DepType.REG
+                    elif name in _MEM_PRIMS or pname in _MEM_PRIMS:
+                        dep = DepType.DYN_MEM
+                    else:
+                        dep = DepType.REG
+                else:
+                    dep = DepType.INTRA
+                g.add_edge(u, idx, dep=dep)
+        for outvar in eqn.outvars:
+            producer[id(outvar)] = idx
+    return g
+
+
+def domain_counts(g: nx.DiGraph) -> dict[Domain, int]:
+    counts = {d: 0 for d in Domain}
+    for _, data in g.nodes(data=True):
+        counts[data["domain"]] += data.get("weight", 1)
+    return counts

@@ -1,0 +1,361 @@
+"""Snitch dual-issue timing model (discrete-event), reproducing Fig. 2a/2c
+and Fig. 3 of the paper.
+
+Two simulators share one micro-architectural vocabulary (``isa.py``):
+
+* :func:`simulate_single_issue` — the RV32G baseline: one instruction per
+  cycle, in-order, with a register scoreboard (RAW stalls from result
+  latencies) and a single integer-RF writeback port (multi-cycle producers
+  like ``mul`` collide with 1-cycle ops — the structural hazard the paper
+  blames for the LCG kernels' stalls, §III-A).
+
+* :func:`simulate_copift` — the COPIFT schedule: the integer core and the
+  FPSS each issue from their own phase streams with their own scoreboards;
+  per paper §II-A Step 7, the *first* FREP iteration of each FP phase is
+  issued by the integer core (occupying its issue slot), after which the
+  FREP sequencer streams the remaining ``B-1`` iterations concurrently with
+  the integer thread.  Per-block overheads — SSR reprogramming (base
+  pointers change every block because of multi-buffering), buffer-pointer
+  switching, FREP setup — are executed as integer-thread instructions, so
+  they raise the dynamic instruction count *and* the cycle count, exactly
+  the effect the paper observes on the exp kernel ("instruction overhead
+  required to program the SSRs and switch buffers in every block
+  iteration").
+
+Block-level composition (Fig. 3): ``problem_cycles`` sums pipeline
+iterations j' = 0 .. n_blocks+depth-2, where iteration cycles are
+max(integer-thread cycles, FP-thread cycles) over the phases active in that
+iteration, plus a fixed program prologue (initial SSR/buffer setup).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.isa import (BUFFER_SWITCH_CYCLES, Instr, KernelTrace,
+                            SSR_SETUP_CYCLES_PER_STREAM, Domain)
+
+
+# ---------------------------------------------------------------------------
+# Scoreboarded in-order issue
+# ---------------------------------------------------------------------------
+
+def _ssa_unroll(instrs: list[Instr], iters: int) -> list[Instr]:
+    """Unroll ``iters`` copies of the body with SSA renaming.
+
+    Plain registers get an ``@iter`` suffix (independent iterations can
+    overlap); loop-carried names (``loop:*`` — PRNG state, pointers,
+    accumulators) and memory cells get *version* numbers on every write, so
+    true recurrences remain serial chains through the versions — exactly why
+    the LCG kernels' stalls "could not be eliminated by unrolling"
+    (paper §III-A).
+    """
+    version: dict[str, int] = {}
+    out: list[Instr] = []
+    for it in range(iters):
+        for ins in instrs:
+            def rn_src(name: str) -> str:
+                if name.startswith("const:"):
+                    return name
+                if name.startswith(("loop:", "mem:")):
+                    return f"{name}#{version.get(name, 0)}"
+                return f"{name}@{it}"
+            srcs = tuple(rn_src(s) for s in ins.srcs)
+            dst = ins.dst
+            if dst is not None:
+                if dst.startswith(("loop:", "mem:")):
+                    version[dst] = version.get(dst, 0) + 1
+                    dst = f"{dst}#{version[dst]}"
+                else:
+                    dst = f"{dst}@{it}"
+            out.append(Instr(ins.opcode, dst, srcs, ins.dyn_addr, ins.tag))
+    return out
+
+
+def _list_schedule(instrs: list[Instr]) -> list[Instr]:
+    """Latency-aware greedy list scheduling (models -O3 + hand scheduling):
+    dependency graph over the SSA-renamed stream, priority = longest
+    remaining latency path, output = a static program order the in-order
+    core then executes.  Only true (RAW) dependencies constrain order —
+    SSA renaming removed WAR/WAW."""
+    n = len(instrs)
+    succs: list[list[int]] = [[] for _ in range(n)]
+    preds: list[int] = [0] * n
+    writer: dict[str, int] = {}
+    for i, ins in enumerate(instrs):
+        for s in ins.srcs:
+            if s in writer:
+                succs[writer[s]].append(i)
+                preds[i] += 1
+        if ins.dst is not None:
+            writer[ins.dst] = i
+    # Longest-path priority (critical path in latency terms).
+    prio = [0] * n
+    for i in range(n - 1, -1, -1):
+        lat = instrs[i].lat
+        prio[i] = lat + max((prio[s] for s in succs[i]), default=0)
+    import heapq
+    ready = [(-prio[i], i) for i in range(n) if preds[i] == 0]
+    heapq.heapify(ready)
+    order: list[Instr] = []
+    indeg = preds[:]
+    while ready:
+        _, i = heapq.heappop(ready)
+        order.append(instrs[i])
+        for s in succs[i]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(ready, (-prio[s], s))
+    assert len(order) == n
+    return order
+
+
+def _simulate_inorder(instrs: list[Instr], tcdm_contention: float = 0.0) -> int:
+    """In-order single-issue execution of a statically scheduled stream:
+    RAW stalls from result latencies + the single integer-RF write port
+    (multi-cycle producers — mul, and cross-RF FP ops targeting the int RF —
+    reserve their retire slot; colliding 1-cycle writers stall).
+
+    ``tcdm_contention`` adds fractional stall cycles per memory access,
+    modeling SSR-stream/LSU bank conflicts on the shared TCDM when data
+    movers are active."""
+    ready: dict[str, int] = {}
+    wb_busy: set[int] = set()
+    t = 0
+    mem_accesses = 0
+    for ins in instrs:
+        t += 1  # issue slot
+        for s in ins.srcs:
+            if s in ready and ready[s] > t:
+                t = ready[s]
+        if ins.domain is Domain.MEM or ins.opcode in ("lw", "sw", "fld", "fsd",
+                                                      "flw", "fsw"):
+            mem_accesses += 1
+        if ins.dst is not None:
+            wb = t + ins.lat - 1
+            if ins.wb_port_hazard:
+                while wb in wb_busy:  # port taken → retire one later
+                    wb += 1
+                wb_busy.add(wb)
+            elif ins.writes_int_rf and wb in wb_busy:
+                # 1-cycle op collides with an earlier producer's retire slot.
+                while wb in wb_busy:
+                    t += 1
+                    wb = t + ins.lat - 1
+            ready[ins.dst] = wb + 1
+    return t + int(mem_accesses * tcdm_contention)
+
+
+def simulate_single_issue(instrs: list[Instr], iters: int = 1,
+                          schedule: bool = True,
+                          tcdm_contention: float = 0.0) -> int:
+    """Cycles for ``iters`` repetitions of ``instrs`` on the in-order core:
+    SSA-unroll → list-schedule (unless ``schedule=False``) → simulate."""
+    stream = _ssa_unroll(instrs, iters)
+    if schedule:
+        stream = _list_schedule(stream)
+    return _simulate_inorder(stream, tcdm_contention)
+
+
+def thread_cycles(instrs: list[Instr], iters: int = 1,
+                  tcdm_contention: float = 0.0) -> int:
+    """Cycles for one thread of a dual-issue pair (same issue rules).
+    Unrolling/scheduling is windowed (groups of 8 iterations) to bound the
+    scheduler's scope to a realistic FREP/loop-buffer horizon."""
+    if iters <= 0:
+        return 0
+    WINDOW = 8
+    full, rem = divmod(iters, WINDOW)
+    cycles = 0
+    if full:
+        per = simulate_single_issue(instrs, WINDOW, tcdm_contention=tcdm_contention)
+        cycles += per * full
+    if rem:
+        cycles += simulate_single_issue(instrs, rem, tcdm_contention=tcdm_contention)
+    return cycles
+
+
+# ---------------------------------------------------------------------------
+# COPIFT block schedule
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CopiftSchedule:
+    """Static description of one COPIFT-transformed kernel's inner loop.
+
+    ``int_body`` / ``fp_bodies`` are per-element instruction sequences; the
+    FP bodies are indexed by FP phase (the paper fuses them into one FREP
+    loop in steady state, which we model by concatenation).
+    ``phase_order`` positions the phases in the software pipeline (Step 5):
+    entries are ("int", 0) or ("fp", k); default INT→FP (the MC kernels).
+    """
+    name: str
+    int_body: list[Instr]
+    fp_bodies: list[list[Instr]]
+    n_ssrs: int = 3                      # streams after fusion (≤3)
+    n_buffer_replicas: int = 6           # Table I "#Buff." after Steps 5–6
+    pipeline_depth: int = 3              # number of phases
+    phase_order: tuple = ()              # e.g. (("fp",0),("int",0),("fp",1))
+
+    def __post_init__(self):
+        if not self.phase_order:
+            self.phase_order = tuple(
+                [("fp", k) for k in range(len(self.fp_bodies) - 1)]
+                + [("int", 0)]
+                + [("fp", len(self.fp_bodies) - 1)]) \
+                if len(self.fp_bodies) > 1 else (("int", 0), ("fp", 0))
+        self.pipeline_depth = len(self.phase_order)
+
+    @property
+    def n_int(self) -> int:
+        return len(self.int_body)
+
+    @property
+    def n_fp(self) -> int:
+        return sum(len(b) for b in self.fp_bodies)
+
+    def block_overhead_instrs(self) -> int:
+        """Integer-thread bookkeeping instructions per block iteration:
+        SSR base/bound reprogramming (multi-buffering moves the bases every
+        block), buffer-pointer rotation, FREP setup, loop bookkeeping."""
+        ssr_cfg = self.n_ssrs * SSR_SETUP_CYCLES_PER_STREAM
+        buf_switch = 2 * self.n_buffer_replicas
+        frep_setup = 2 * len(self.fp_bodies)
+        loop = BUFFER_SWITCH_CYCLES
+        return ssr_cfg + buf_switch + frep_setup + loop
+
+
+@dataclass
+class BlockTiming:
+    cycles: int
+    int_cycles: int
+    fp_cycles: int
+    instrs: int
+
+    @property
+    def ipc(self) -> float:
+        return self.instrs / self.cycles
+
+
+def copift_block_timing(sched: CopiftSchedule, block: int) -> BlockTiming:
+    """Steady-state cycles for one block iteration (paper Fig. 2a regime)."""
+    oh = sched.block_overhead_instrs()
+    fp_first = sum(len(b) for b in sched.fp_bodies)      # FREP 1st iteration
+    # Integer thread: its own body for the whole block + bookkeeping + the
+    # first FREP iteration of each FP phase (issued through the int core).
+    # SSR data movers are active during the block → TCDM bank contention on
+    # the integer thread's own loads/stores.
+    contention = 0.25 if sched.n_ssrs else 0.0
+    int_cycles = thread_cycles(sched.int_body, block,
+                               tcdm_contention=contention) + oh + fp_first
+    # FP thread: remaining block-1 iterations stream from the FREP buffer.
+    fp_cycles = fp_first + sum(thread_cycles(b, block - 1) for b in sched.fp_bodies)
+    cycles = max(int_cycles, fp_cycles)
+    instrs = (sched.n_int + sched.n_fp) * block + oh
+    return BlockTiming(cycles=cycles, int_cycles=int_cycles,
+                       fp_cycles=fp_cycles, instrs=instrs)
+
+
+def baseline_timing(trace: KernelTrace, n: int = 1) -> BlockTiming:
+    cycles = simulate_single_issue(trace.instrs, n)
+    instrs = len(trace.instrs) * n
+    return BlockTiming(cycles=cycles, int_cycles=cycles, fp_cycles=0,
+                       instrs=instrs)
+
+
+#: Fixed program prologue: initial SSR stream configuration, buffer
+#: allocation, loop setup (cycles).  Affects Fig. 3 small-problem IPC only.
+PROGRAM_PROLOGUE_CYCLES = 120
+
+
+def copift_problem_timing(sched: CopiftSchedule, problem: int,
+                          block: int) -> BlockTiming:
+    """Full-problem cycles with software-pipeline fill/drain (Fig. 3).
+
+    Pipeline iteration j' runs phase p on block j'-p (when in range); its
+    cost is max(integer-thread work, FP-thread work) over the phases active
+    in that iteration plus the per-block integer bookkeeping.  All interior
+    iterations are identical, so we evaluate fill (d-1), one steady
+    iteration, and drain (d-1) exactly and scale.
+    """
+    n_blocks = max(1, math.ceil(problem / block))
+    d = sched.pipeline_depth
+    oh = sched.block_overhead_instrs()
+    fp_first = sum(len(b) for b in sched.fp_bodies)
+    contention = 0.25 if sched.n_ssrs else 0.0
+    int_blk = thread_cycles(sched.int_body, block, tcdm_contention=contention)
+    fp_blk = [thread_cycles(b, max(0, block - 1)) + len(b)
+              for b in sched.fp_bodies]
+
+    def iter_cost(jp: int) -> int:
+        active = [(p, jp - p) for p in range(d) if 0 <= jp - p < n_blocks]
+        if not active:
+            return 0
+        ic = fc = 0
+        for p, _ in active:
+            kind, idx = sched.phase_order[p]
+            if kind == "int":
+                ic += int_blk + oh + fp_first
+            else:
+                fc += fp_blk[idx]
+        return max(ic, fc)
+
+    total_iters = n_blocks + d - 1
+    cycles = PROGRAM_PROLOGUE_CYCLES
+    # fill: j' in [0, d-1); drain: j' in [n_blocks, n_blocks+d-1)
+    for jp in range(min(d - 1, total_iters)):
+        cycles += iter_cost(jp)
+    steady_iters = max(0, n_blocks - (d - 1))
+    if steady_iters:
+        cycles += steady_iters * iter_cost(d - 1 if n_blocks >= d else 0)
+    for jp in range(max(d - 1, n_blocks), total_iters):
+        cycles += iter_cost(jp)
+    instrs = (sched.n_int + sched.n_fp) * problem + oh * n_blocks
+    return BlockTiming(cycles=cycles, int_cycles=0, fp_cycles=0, instrs=instrs)
+
+
+def ipc_surface(sched: CopiftSchedule, problems: list[int],
+                blocks: list[int]) -> dict[tuple[int, int], float]:
+    """IPC over a (problem size × block size) grid — Fig. 3."""
+    out = {}
+    for n in problems:
+        for b in blocks:
+            if b > n:
+                continue
+            out[(n, b)] = copift_problem_timing(sched, n, b).ipc
+    return out
+
+
+@dataclass
+class KernelResult:
+    name: str
+    ipc_base: float
+    ipc_copift: float
+    speedup: float
+    cycles_base: int
+    cycles_copift: int
+    instrs_base: int
+    instrs_copift: int
+
+    @property
+    def ipc_gain(self) -> float:
+        return self.ipc_copift / self.ipc_base
+
+
+def evaluate_kernel(name: str, base: KernelTrace, sched: CopiftSchedule,
+                    block: int, steady_elems: int | None = None) -> KernelResult:
+    """Steady-state comparison of baseline vs COPIFT (Fig. 2a / 2c)."""
+    n = steady_elems or block
+    bt = baseline_timing(base, n)
+    ct = copift_block_timing(sched, block)
+    blocks_needed = n / block
+    c_cycles = int(ct.cycles * blocks_needed)
+    c_instrs = int(ct.instrs * blocks_needed)
+    return KernelResult(
+        name=name,
+        ipc_base=bt.instrs / bt.cycles,
+        ipc_copift=ct.ipc,
+        speedup=bt.cycles / c_cycles,
+        cycles_base=bt.cycles, cycles_copift=c_cycles,
+        instrs_base=bt.instrs, instrs_copift=c_instrs)

@@ -1,0 +1,1 @@
+"""data substrate (see DESIGN.md §4)."""

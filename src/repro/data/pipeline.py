@@ -1,0 +1,78 @@
+"""Deterministic synthetic token pipeline, driven by the paper's PRNGs.
+
+The data path is the Monte-Carlo machinery reused: ``repro.kernels.ops.
+uniform`` (xoshiro128+ by default — the paper's generator) produces the
+token stream.  Determinism contract: ``batch_at(step)`` depends only on
+(seed, step, shape) — restart/resume and elastic re-shard reproduce the
+exact same batches, which the fault-tolerance tests assert bitwise.
+
+Multi-host: each host materializes only its slice (process_index-strided);
+under jit the global batch is assembled by the runtime via
+``jax.make_array_from_process_local_data`` on real fleets.  This container
+is single-process, so host slicing degenerates to the identity (tested
+structurally).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.kernels import ops as kops
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    seed: int = 1234
+    kind: str = "xoshiro128p"      # the paper's PRNG
+
+
+class TokenPipeline:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 pcfg: PipelineConfig = PipelineConfig()):
+        self.cfg = cfg
+        self.shape = shape
+        self.pcfg = pcfg
+        self.n_hosts = jax.process_count()
+        self.host = jax.process_index()
+        assert shape.global_batch % self.n_hosts == 0 or shape.global_batch == 1
+        self.host_batch = max(1, shape.global_batch // self.n_hosts)
+
+    def _step_seed(self, step: int) -> int:
+        # Golden-ratio stride decorrelates steps; host offset decorrelates
+        # nothing (every host draws the same global stream and slices it),
+        # which is what keeps elastic re-sharding bitwise reproducible.
+        return (self.pcfg.seed + step * 0x9e3779b9) & 0x7fffffff
+
+    def global_batch_at(self, step: int) -> dict:
+        """Sticky-token stream: with prob 1-p the token resets to a fresh
+        uniform draw, else it repeats — a learnable synthetic language whose
+        optimal NLL ≈ (1-p)·ln V + H(p), so training curves actually fall
+        (quickstart example) while staying fully deterministic."""
+        B, T = self.shape.global_batch, self.shape.seq_len
+        p_stick = 0.9
+        u = kops.uniform(self._step_seed(step), (B, T + 1), kind=self.pcfg.kind)
+        fresh = jnp.minimum((u * self.cfg.vocab_size).astype(jnp.int32),
+                            self.cfg.vocab_size - 1)
+        ur = kops.uniform(self._step_seed(step) ^ 0x1b873593, (B, T + 1),
+                          kind=self.pcfg.kind)
+        t_idx = jnp.arange(T + 1)[None, :]
+        reset = (ur >= p_stick) | (t_idx == 0)
+        src = jax.lax.cummax(jnp.where(reset, t_idx, 0), axis=1)
+        tokens = jnp.take_along_axis(fresh, src, axis=1)
+        if self.cfg.frontend == "audio":
+            ue = kops.uniform(self._step_seed(step) ^ 0x5bd1e995,
+                              (B, T, self.cfg.d_model), kind=self.pcfg.kind)
+            return {"embeds": (ue * 2 - 1).astype(jnp.bfloat16),
+                    "labels": tokens[:, :T]}
+        return {"tokens": tokens[:, :T]}
+
+    def host_batch_at(self, step: int) -> dict:
+        full = self.global_batch_at(step)
+        lo = self.host * self.host_batch
+        return jax.tree.map(lambda a: a[lo:lo + self.host_batch], full)

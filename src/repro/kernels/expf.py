@@ -1,0 +1,71 @@
+"""COPIFT exp as a Pallas TPU kernel.
+
+COPIFT-step → Pallas realization (DESIGN.md §2):
+
+* Step 4 (loop tiling)            → the ``grid`` over row blocks
+* Step 5 (pipelining/multi-buffer)→ Pallas's automatic double-buffering of
+  HBM→VMEM input blocks against compute on the current block
+* Step 6 (SSR affine streams)     → ``BlockSpec((rb, LANES), lambda i: (i,0))``
+  — an affine index map executed by the DMA engines
+* Step 7 (FREP)                   → the unrolled elementwise body below,
+  scheduled once and replayed per block without refetch
+* phases                          → FP₀ (scale/round) → INT₁ (exponent-field
+  bit assembly on the VPU integer lanes) → FP₂ (polynomial × scale); the
+  Type-3 int↔fp crossings stay lane-local (``astype``/bitcast), the TPU
+  analogue of the cft.* custom instructions (no cross-RF round trip).
+
+The block shape is (rows, 1024): 1024 = 8 sublanes × 128 lanes, the native
+VPU vreg tile, so every op is register-aligned.  VMEM working set per grid
+step = in + out + double buffers = 4·rb·1024·4 B; the default rb=64 keeps it
+at 1 MiB, far under the ~16 MiB budget (see EXPERIMENTS.md §Perf for the
+block-shape sweep).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _EXP2_POLY, _LN2_HI, _LN2_LO, _LOG2E
+
+LANES = 1024          # 8 sublanes × 128 lanes — one fp32 vreg tile
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _exp_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # --- FP phase 0: z, round, Cody-Waite remainder (Fig. 1 phase 0).
+    z = x * _LOG2E
+    kd = jnp.round(z)
+    r = (x - kd * _LN2_HI) - kd * _LN2_LO
+    # --- INT phase 1: assemble the scale 2^ki in the exponent field.
+    ki = jnp.clip(kd.astype(jnp.int32), -126, 127)
+    sbits = jnp.left_shift(ki + jnp.int32(127), 23)
+    s = jax.lax.bitcast_convert_type(sbits, jnp.float32)
+    # --- FP phase 2: polynomial (Horner, degree 7) and scale.
+    p = jnp.full_like(r, _EXP2_POLY[0])
+    for c in _EXP2_POLY[1:]:
+        p = p * r + c
+    y = (p * r + jnp.float32(1.0)) * s
+    y = jnp.where(x > 88.0, jnp.inf, y)
+    y = jnp.where(x < -87.0, 0.0, y)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def exp_2d(x: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS,
+           interpret: bool = False) -> jax.Array:
+    """exp over a (rows, LANES) fp32 array, rows % block_rows == 0."""
+    rows, lanes = x.shape
+    assert lanes == LANES and rows % block_rows == 0, (x.shape, block_rows)
+    return pl.pallas_call(
+        _exp_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x.astype(jnp.float32))

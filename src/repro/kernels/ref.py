@@ -1,0 +1,276 @@
+"""Pure-jnp oracles for every kernel in ``repro.kernels``.
+
+These implement the *same algorithms* as the Pallas kernels (same constants,
+same phase decomposition, same PRNG state transitions) so kernel↔ref
+comparisons are tight (rtol ~1e-6 fp32); accuracy vs the transcendental
+ground truth (jnp.exp / jnp.log at fp64) is asserted separately.
+
+Algorithms follow the paper's sources:
+
+* ``exp_ref`` / ``log_ref`` — GNU C library v2.40 style: integer phase does
+  exponent extraction / table indexing / scale assembly with bit ops; FP
+  phase evaluates a short polynomial.  TPU adaptation (DESIGN.md §2): fp32
+  arithmetic (no fp64 on v5e), exp uses the round-to-int + bit-assembled
+  scale (no table — 7 extra FMAs beat a lane gather on the VPU), log keeps
+  its 16-entry invc/logc table (the ISSR/gather story).
+* ``lcg_*`` / ``xoshiro128p_*`` — the paper's two PRN generators, vectorized
+  over lanes (each lane an independent stream, seeded via splitmix32).
+* ``mc_pi_ref`` / ``mc_poly_ref`` — hit-and-miss Monte-Carlo integration.
+* ``softmax_ref`` — row softmax via the same exp construction (the paper's
+  LLM motivation: expf is the core of softmax).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# exp — glibc-expf-style, fp32, exp2 formulation
+# ---------------------------------------------------------------------------
+
+_LOG2E = np.float32(1.4426950408889634)     # 1/ln(2)
+_LN2 = np.float32(0.6931471805599453)
+#: Cody–Waite split of ln2: HI exact in fp32 (0x3f318000), LO the residual.
+#: The remainder r = x − kd·HI − kd·LO is computed in *x units*, removing the
+#: O(|z| ulp) rounding error a z-space remainder would carry at large |x| —
+#: the fp32 stand-in for glibc's double-precision internals (DESIGN.md §2).
+_LN2_HI = np.float32(0.693359375)
+_LN2_LO = np.float32(-2.12194440e-4)
+#: Taylor coefficients of e^r, |r| ≤ ln2/2, degree 7 (Horner order).
+_EXP2_POLY = tuple(np.float32(1.0 / math.factorial(k))
+                   for k in range(7, 0, -1))
+
+
+def _exp_poly(r: jax.Array) -> jax.Array:
+    """FP phase: polynomial for e^r on [-ln2/2, ln2/2] (Horner)."""
+    p = jnp.full_like(r, _EXP2_POLY[0])
+    for c in _EXP2_POLY[1:]:
+        p = p * r + c
+    return p * r + jnp.float32(1.0)
+
+
+def exp_ref(x: jax.Array) -> jax.Array:
+    """COPIFT exp: FP phase 0 (scale/round/remainder) → INT phase 1 (scale-
+    bit assembly) → FP phase 2 (polynomial × scale).  Mirrors Fig. 1."""
+    x = x.astype(jnp.float32)
+    # Clamp into the representable domain FIRST so both branches of the
+    # final selects stay finite — otherwise -inf inputs (softmax masks)
+    # poison gradients through jnp.where.
+    xc = jnp.clip(x, -104.0, 89.0)
+    # --- FP phase 0: z, round-to-nearest kd, Cody–Waite remainder r.
+    z = xc * _LOG2E
+    kd = jnp.round(z)
+    r = (xc - kd * _LN2_HI) - kd * _LN2_LO
+    # --- INT phase 1: assemble 2^ki by exponent-field bit insertion.
+    ki = kd.astype(jnp.int32)
+    ki = jnp.clip(ki, -126, 127)            # flush to avoid inf/denormal bits
+    sbits = jnp.left_shift(ki + jnp.int32(127), 23)
+    s = jax.lax.bitcast_convert_type(sbits, jnp.float32)
+    # --- FP phase 2: polynomial and scale.
+    y = _exp_poly(r) * s
+    # Clamp the out-of-range inputs the bit assembly cannot represent.
+    y = jnp.where(x > 88.0, jnp.inf, y)
+    y = jnp.where(x < -87.0, 0.0, y)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# log — glibc-logf-style with the 16-entry invc/logc table (ISSR analogue)
+# ---------------------------------------------------------------------------
+
+_LOGF_TABLE_BITS = 4
+_LOGF_OFF = np.int32(0x3f330000)
+
+
+def _build_logf_table():
+    n = 1 << _LOGF_TABLE_BITS
+    invc = np.empty(n, np.float32)
+    logc = np.empty(n, np.float32)
+    for i in range(n):
+        # Center of the i-th mantissa window after the OFF re-bias.
+        bits = np.int32(0x3f330000 + (i << (23 - _LOGF_TABLE_BITS))
+                        + (1 << (22 - _LOGF_TABLE_BITS)))
+        c = np.frombuffer(np.int32(bits).tobytes(), np.float32)[0].astype(np.float64)
+        invc[i] = np.float32(1.0 / c)
+        logc[i] = np.float32(np.log(c))
+    return jnp.asarray(invc), jnp.asarray(logc)
+
+
+LOGF_INVC, LOGF_LOGC = _build_logf_table()
+
+#: ln(1+r) Taylor coefficients (degree 4), |r| ≲ 0.05.
+_LOG1P_POLY = (np.float32(-0.25), np.float32(1.0 / 3.0), np.float32(-0.5))
+
+
+def log_ref(x: jax.Array) -> jax.Array:
+    """COPIFT log: INT phase 0 (bit manip + table index = the ISSR stream)
+    → FP phase 1 (r = z*invc - 1, polynomial, k·ln2)."""
+    x = x.astype(jnp.float32)
+    # --- INT phase 0.
+    ix = jax.lax.bitcast_convert_type(x, jnp.int32)
+    tmp = ix - _LOGF_OFF
+    i = jnp.right_shift(tmp, 23 - _LOGF_TABLE_BITS) & jnp.int32(
+        (1 << _LOGF_TABLE_BITS) - 1)
+    k = jnp.right_shift(tmp, 23)            # arithmetic shift → signed exp
+    iz = ix - (tmp & jnp.int32(np.int32(np.uint32(0xff800000))))
+    z = jax.lax.bitcast_convert_type(iz, jnp.float32)
+    # --- (ISSR) gather: invc/logc streams driven by the index stream.
+    invc = LOGF_INVC[i]
+    logc = LOGF_LOGC[i]
+    # --- FP phase 1.
+    r = z * invc - jnp.float32(1.0)
+    p = jnp.full_like(r, _LOG1P_POLY[0])
+    for c in _LOG1P_POLY[1:]:
+        p = p * r + c
+    y = (p * r + jnp.float32(1.0)) * r      # ln(1+r)
+    return y + logc + k.astype(jnp.float32) * _LN2
+
+
+# ---------------------------------------------------------------------------
+# PRNGs — LCG and xoshiro128+ (the paper's generators), lane-parallel
+# ---------------------------------------------------------------------------
+
+LCG_A = np.uint32(1664525)
+LCG_C = np.uint32(1013904223)
+
+
+def splitmix32(seed: jax.Array) -> jax.Array:
+    """Seed expander (lane decorrelation), uint32 → uint32."""
+    z = (seed + np.uint32(0x9e3779b9)).astype(jnp.uint32)
+    z = (z ^ (z >> 16)) * np.uint32(0x85ebca6b)
+    z = (z ^ (z >> 13)) * np.uint32(0xc2b2ae35)
+    return z ^ (z >> 16)
+
+
+def lcg_init(seed: int, lanes: int) -> jax.Array:
+    base = jnp.arange(lanes, dtype=jnp.uint32) + jnp.uint32(seed)
+    return splitmix32(base)
+
+
+def lcg_next(state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One LCG step per lane; the output mixes high bits (the paper's int
+    phase: mul — the writeback-hazard instruction — add, shift, xor)."""
+    new = state * LCG_A + LCG_C
+    out = (new >> np.uint32(9)) ^ new
+    return new, out
+
+
+def xoshiro128p_init(seed: int, lanes: int) -> jax.Array:
+    base = jnp.arange(lanes, dtype=jnp.uint32) + jnp.uint32(seed)
+    s = [splitmix32(base + np.uint32((k * 0x9e3779b9) & 0xffffffff))
+         for k in range(4)]
+    return jnp.stack(s)                     # (4, lanes)
+
+
+def _rotl(v: jax.Array, k: int) -> jax.Array:
+    return (v << np.uint32(k)) | (v >> np.uint32(32 - k))
+
+
+def xoshiro128p_next(state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """xoshiro128+ step per lane (the paper's 8-op integer core)."""
+    s0, s1, s2, s3 = state
+    out = s0 + s3
+    t = s1 << np.uint32(9)
+    s2 = s2 ^ s0
+    s3 = s3 ^ s1
+    s1 = s1 ^ s2
+    s0 = s0 ^ s3
+    s2 = s2 ^ t
+    s3 = _rotl(s3, 11)
+    return jnp.stack([s0, s1, s2, s3]), out
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """FP phase entry: uint32 → fp32 in [0, 1) using the top 24 bits — the
+    fcvt.d.wu + scale fmadd pair of the paper's kernels (via the COPIFT
+    cft.fcvt duplicates in the accelerated variants)."""
+    return (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(2.0 ** -24)
+
+
+def prng_uniform(kind: str, seed: int, shape: tuple[int, ...]) -> jax.Array:
+    """Dense uniform block, one draw per element (lane-parallel)."""
+    n = int(np.prod(shape))
+    if kind == "lcg":
+        state = lcg_init(seed, n)
+        _, bits = lcg_next(state)
+    elif kind == "xoshiro128p":
+        state = xoshiro128p_init(seed, n)
+        _, bits = xoshiro128p_next(state)
+    else:
+        raise ValueError(kind)
+    return uniform_from_bits(bits).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo integration (hit and miss), paper §III-A
+# ---------------------------------------------------------------------------
+
+#: The polynomial integrated by the poly_* kernels: f(x) = (4x³+3x²+2x+1)/10,
+#: chosen so f([0,1]) ⊂ [0,1] (valid hit-and-miss density).  ∫₀¹ f = 0.4.
+MC_POLY_COEFFS = (0.4, 0.3, 0.2, 0.1)
+MC_POLY_INTEGRAL = 0.4
+
+
+def _mc_poly_eval(x: jax.Array) -> jax.Array:
+    p = jnp.full_like(x, np.float32(MC_POLY_COEFFS[0]))
+    for c in MC_POLY_COEFFS[1:]:
+        p = p * x + np.float32(c)
+    return p
+
+
+def _mc_state(kind: str, seed: int, lanes: int):
+    if kind == "lcg":
+        return lcg_init(seed, lanes), lcg_next
+    return xoshiro128p_init(seed, lanes), xoshiro128p_next
+
+
+def mc_pi_ref(kind: str, seed: int, n_samples: int, lanes: int = 1024) -> jax.Array:
+    """π/4 hit-and-miss: hit if x²+y²<1.  Returns the π estimate."""
+    state, step = _mc_state(kind, seed, lanes)
+    iters = n_samples // lanes
+
+    def body(i, carry):
+        state, acc = carry
+        state, bx = step(state)
+        state, by = step(state)             # 2 draws per sample (Table I)
+        x = uniform_from_bits(bx)
+        y = uniform_from_bits(by)
+        hit = (x * x + y * y) < jnp.float32(1.0)   # the flt.d comparison
+        return state, acc + hit.astype(jnp.float32)
+
+    _, acc = jax.lax.fori_loop(0, iters, body, (state, jnp.zeros(lanes, jnp.float32)))
+    return 4.0 * jnp.sum(acc) / (iters * lanes)
+
+
+def mc_poly_ref(kind: str, seed: int, n_samples: int, lanes: int = 1024) -> jax.Array:
+    """Hit-and-miss integral of MC_POLY on [0,1]: hit if u < f(x)."""
+    state, step = _mc_state(kind, seed, lanes)
+    iters = n_samples // lanes
+
+    def body(i, carry):
+        state, acc = carry
+        state, bx = step(state)
+        state, bu = step(state)
+        x = uniform_from_bits(bx)
+        u = uniform_from_bits(bu)
+        hit = u < _mc_poly_eval(x)
+        return state, acc + hit.astype(jnp.float32)
+
+    _, acc = jax.lax.fori_loop(0, iters, body, (state, jnp.zeros(lanes, jnp.float32)))
+    return jnp.sum(acc) / (iters * lanes)
+
+
+# ---------------------------------------------------------------------------
+# softmax — the paper's LLM motivation
+# ---------------------------------------------------------------------------
+
+def softmax_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable softmax whose exp is the COPIFT exp construction."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = exp_ref((x - m).astype(jnp.float32))
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)

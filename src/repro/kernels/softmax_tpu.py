@@ -1,0 +1,64 @@
+"""COPIFT softmax as a Pallas TPU kernel — the paper's LLM bridge.
+
+Paper §III-A: vectorized expf "is the main component of softmax operations,
+which consume a considerable fraction of cycles in modern LLMs."  This
+kernel embeds the COPIFT exp construction (FP scale/round → INT exponent
+assembly → FP polynomial) inside a numerically-stable row softmax, and is
+what ``repro.models`` attention uses when ``use_copift_softmax`` is set.
+
+Tiling: grid over row blocks; each grid step holds (block_rows, cols) in
+VMEM — cols up to 32 k fp32 (128 KiB/row-block-slice) stays comfortably
+inside VMEM for block_rows ≤ 32.  Row-internal reductions (max/sum) run on
+the VPU; the three COPIFT phases of the exp are as in ``exp.py``.
+
+For rows longer than VMEM allows, ``ops.softmax`` falls back to a two-pass
+chunked jnp path (same math) — documented, not silent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _EXP2_POLY, _LN2_HI, _LN2_LO, _LOG2E
+
+
+def _exp_phases(r_in):
+    """The COPIFT exp construction on an arbitrary-shape fp32 array."""
+    z = r_in * _LOG2E
+    kd = jnp.round(z)
+    r = (r_in - kd * _LN2_HI) - kd * _LN2_LO
+    ki = jnp.clip(kd.astype(jnp.int32), -126, 127)
+    s = jax.lax.bitcast_convert_type(
+        jnp.left_shift(ki + jnp.int32(127), 23), jnp.float32)
+    p = jnp.full_like(r, _EXP2_POLY[0])
+    for c in _EXP2_POLY[1:]:
+        p = p * r + c
+    y = (p * r + jnp.float32(1.0)) * s
+    return jnp.where(r_in < -87.0, 0.0, y)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = _exp_phases(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax_2d(x: jax.Array, block_rows: int = 8,
+               interpret: bool = False) -> jax.Array:
+    """Row softmax over (rows, cols); rows % block_rows == 0."""
+    rows, cols = x.shape
+    assert rows % block_rows == 0, (x.shape, block_rows)
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,1 @@
+"""launch substrate (see DESIGN.md §4)."""

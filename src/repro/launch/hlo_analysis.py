@@ -1,0 +1,179 @@
+"""Trip-count-aware analysis of compiled SPMD HLO text.
+
+XLA's ``HloCostAnalysis`` (and any naive text scan) counts a ``while`` body
+ONCE — but our stacks are scans (layers × attention blocks × CE chunks), so
+collectives and flops inside bodies execute ``trip_count`` times.  This
+module parses the HLO into its computation graph, extracts each while
+loop's trip count from its condition's constant bound, and accumulates
+per-collective payload bytes with the proper multipliers, recursively
+through nested loops.
+
+Validated in tests/test_hlo_analysis.py against hand-built scans with known
+collective counts.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+def _header_name(stripped: str) -> str | None:
+    """Computation header: '[ENTRY] %name (params...) -> type {'.
+    Params may contain nested parens (tuples), so split on whitespace."""
+    if not (stripped.endswith("{") and "->" in stripped):
+        return None
+    tok = stripped.split()
+    if not tok:
+        return None
+    name = tok[1] if tok[0] == "ENTRY" and len(tok) > 1 else tok[0]
+    return name.lstrip("%")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(
+    r"(while|call|conditional)\(.*?\).*?"
+    r"(?:body=%?([\w.\-]+))?(?:,\s*condition=%?([\w.\-]+))?", re.S)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+
+
+def split_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        name = _header_name(stripped)
+        if name is not None:
+            cur = Computation(name)
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(stripped)
+    return comps
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the instruction's RESULT type (lhs of '= <type> op(...')."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    rest = line[eq + 1:]
+    # result type(s) run until the opcode token
+    for op in COLLECTIVES:
+        idx = rest.find(f" {op}")
+        if idx > 0:
+            return _shape_bytes(rest[:idx])
+    return 0
+
+
+def _trip_count(cond: Computation | None, body: Computation | None) -> int:
+    """lax.scan conditions compare the loop counter to a constant bound.
+    ONLY the condition computation is inspected — body constants include
+    dimension sizes and would wildly overcount."""
+    if cond is None:
+        return 1
+    candidates = []
+    for line in cond.lines:
+        candidates += [int(x) for x in _CONST_RE.findall(line)]
+    plausible = [c for c in candidates if 1 < c <= 1_000_000]
+    return max(plausible) if plausible else 1
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-device collective payload bytes, trip-count aware.
+
+    Cost model per device: all-reduce counts 2× its buffer (ring
+    reduce+broadcast), everything else 1× the result shape.
+    """
+    comps = split_computations(hlo)
+
+    # children: computation → [(callee, multiplier)]
+    children: dict[str, list[tuple[str, int]]] = {c: [] for c in comps}
+    own: dict[str, dict] = {c: {k: 0 for k in COLLECTIVES} for c in comps}
+    own_counts: dict[str, dict] = {c: {k: 0 for k in COLLECTIVES}
+                                   for c in comps}
+
+    for name, comp in comps.items():
+        for line in comp.lines:
+            for op in COLLECTIVES:
+                if f" {op}(" in line or f" {op}-start(" in line:
+                    nbytes = _result_bytes(line)
+                    factor = 2 if op == "all-reduce" else 1
+                    own[name][op] += nbytes * factor
+                    own_counts[name][op] += 1
+            if " while(" in line:
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                if bm:
+                    body = comps.get(bm.group(1))
+                    cond = comps.get(cm.group(1)) if cm else None
+                    trips = _trip_count(cond, body)
+                    children[name].append((bm.group(1), trips))
+            elif " call(" in line or " conditional(" in line:
+                for callee in re.findall(r"to_apply=%?([\w.\-]+)", line):
+                    children[name].append((callee, 1))
+                for callee in re.findall(
+                        r"(?:true_computation|false_computation|branch_computations)="
+                        r"[{%]?([\w.\-, %]+)", line):
+                    for c in re.split(r"[,\s%]+", callee):
+                        if c in comps:
+                            children[name].append((c, 1))
+
+    memo: dict[str, tuple[dict, dict]] = {}
+
+    def total(name: str, stack=()) -> tuple[dict, dict]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in own:  # recursion / unknown callee
+            return {k: 0 for k in COLLECTIVES}, {k: 0 for k in COLLECTIVES}
+        b = dict(own[name])
+        c = dict(own_counts[name])
+        for callee, mult in children[name]:
+            cb, cc = total(callee, stack + (name,))
+            for k in COLLECTIVES:
+                b[k] += cb[k] * mult
+                c[k] += cc[k] * mult
+        memo[name] = (b, c)
+        return memo[name]
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: sum every computation once
+        b = {k: sum(own[c][k] for c in comps) for k in COLLECTIVES}
+        cnt = {k: sum(own_counts[c][k] for c in comps) for k in COLLECTIVES}
+    else:
+        b, cnt = total(entry)
+    return {"bytes": b, "counts": cnt, "total_bytes": sum(b.values())}

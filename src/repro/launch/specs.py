@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+weak-type-correct, shardable, zero-allocation input builders.
+
+``input_specs(cfg, shape)`` returns the (kw)args the lowered step function
+takes: for training that's {state, batch}; for decode {params, cache,
+tokens, cache_index}.  Everything is built with ``jax.eval_shape`` over the
+real init functions, so specs can never drift from the code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import init_params
+from repro.models.transformer import init_stack_cache
+from repro.train.train_step import init_train_state
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def train_state_specs(cfg: ModelConfig):
+    params = params_specs(cfg)
+    return jax.eval_shape(lambda p: init_train_state(cfg, p), params)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio":
+        return {"embeds": sds((B, T, cfg.d_model), cfg.dtype),
+                "labels": sds((B, T), jnp.int32)}
+    return {"tokens": sds((B, T), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: init_stack_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return {"params": params_specs(cfg),
+            "cache": cache_specs(cfg, shape),
+            "tokens": sds((shape.global_batch, 1), jnp.int32),
+            "cache_index": sds((), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """The full argument spec set for the cell's step function."""
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return {"state": train_state_specs(cfg), "batch": batch_specs(cfg, shape)}

@@ -1,0 +1,11 @@
+"""Pure-JAX model zoo (no flax): init/apply functions over param pytrees.
+
+Every assigned architecture is assembled from these modules; layer stacks
+are ``jax.lax.scan`` over stacked per-layer params (one-layer HLO, fast
+512-device compiles — the FREP/L0-I$ lesson applied at cluster scale).
+"""
+
+from repro.models.model import (LMModel, build_model, init_params,
+                                loss_fn, forward)
+
+__all__ = ["LMModel", "build_model", "init_params", "loss_fn", "forward"]

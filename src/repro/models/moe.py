@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with per-group
+capacity, shared experts (DeepSeekMoE), grouped-GEMM expert compute, and a
+Switch-style load-balance auxiliary loss.
+
+Dispatch is permutation-based (argsort by expert id + per-expert offsets),
+NOT one-hot einsum — the (tokens × experts × capacity) dispatch tensor of
+the GShard formulation is quadratic-memory and would dominate the dry-run
+memory analysis.  Tokens are processed in fixed-size groups (a lax.scan)
+so the gathered (E, C, D) buffer stays bounded regardless of batch.
+
+Sharding: the expert dimension of ``wi/wg/wo`` carries the EP axis when
+``n_experts`` divides the mesh's model axis (deepseek-moe 64, jamba 16);
+otherwise the per-expert hidden dim carries TP (grok-1's 8 experts on a
+16-way axis — see DESIGN.md §6).  The (E, C, D) gathered activations then
+reshard E over the model axis — XLA materializes the all-to-all.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+GROUP = 4096          # tokens per dispatch group (bounds the (E,C,D) buffer)
+
+
+def moe_layer_pattern(cfg: ModelConfig, layer_idx: int) -> bool:
+    e = cfg.moe
+    if e is None:
+        return False
+    if e.layer_pattern == "all":
+        return True
+    if e.layer_pattern == "all_but_first":
+        return layer_idx > 0
+    if e.layer_pattern == "every_2":
+        return layer_idx % 2 == 1
+    raise ValueError(e.layer_pattern)
+
+
+def init_moe(key, cfg: ModelConfig):
+    e = cfg.moe
+    d, df = cfg.d_model, (e.d_expert or cfg.d_ff)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    gated = cfg.act in ("swiglu", "geglu")
+    scale_in, scale_out = d ** -0.5, df ** -0.5
+
+    def bank(k, n):
+        kk = jax.random.split(k, 3)
+        p = {"up": (jax.random.truncated_normal(kk[0], -2, 2, (n, d, df),
+                                                jnp.float32) * scale_in).astype(dt),
+             "down": (jax.random.truncated_normal(kk[1], -2, 2, (n, df, d),
+                                                  jnp.float32) * scale_out).astype(dt)}
+        if gated:
+            p["gate"] = (jax.random.truncated_normal(kk[2], -2, 2, (n, d, df),
+                                                     jnp.float32) * scale_in).astype(dt)
+        return p
+
+    p = {"router": L.init_linear(ks[0], d, e.n_experts, dt),
+         "experts": bank(ks[1], e.n_experts)}
+    if e.n_shared:
+        p["shared"] = bank(ks[2], e.n_shared)
+    return p
+
+
+def _expert_ffn(bank, x, cfg: ModelConfig):
+    """x: (E, C, D) → (E, C, D) via per-expert (grouped) GEMMs."""
+    dt = jnp.dtype(cfg.dtype)
+    up = jnp.einsum("ecd,edf->ecf", x, bank["up"].astype(dt))
+    if "gate" in bank:
+        up = up * L.act_fn(cfg.act, jnp.einsum("ecd,edf->ecf", x,
+                                               bank["gate"].astype(dt)))
+    else:
+        up = L.act_fn(cfg.act, up)
+    return jnp.einsum("ecf,efd->ecd", up, bank["down"].astype(dt))
+
+
+def _dispatch_group(p, cfg: ModelConfig, xg: jax.Array):
+    """Route one token group.  xg: (S, D) → (out (S, D), aux_loss scalar)."""
+    e = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    S, D = xg.shape
+    E, K = e.n_experts, e.top_k
+    C = int(np.ceil(S * K / E * e.capacity_factor))
+
+    logits = L.linear(p["router"], xg, jnp.float32)          # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                      # (S, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)      # renormalize
+
+    # Switch load-balance loss: E · Σ_e f_e · p_e.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- permutation dispatch: sort (token,slot) pairs by expert.
+    flat_e = idx.reshape(-1)                                 # (S·K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # offset of each expert's run inside the sorted list
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos = jnp.arange(S * K) - starts[sorted_e]               # rank in expert
+    keep = pos < C
+    tok = order // K                                         # source token
+    buf = jnp.zeros((E, C, D), dt)
+    buf = buf.at[sorted_e, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], xg[tok].astype(dt), 0))
+
+    h = _expert_ffn(p["experts"], buf, cfg)                  # (E, C, D)
+
+    # --- combine: each (token, slot) reads back its expert output.
+    slot_val = h[sorted_e, jnp.where(keep, pos, 0)]          # (S·K, D)
+    slot_val = jnp.where(keep[:, None], slot_val, 0)
+    inv = jnp.argsort(order, stable=True)                    # undo the sort
+    per_slot = slot_val[inv].reshape(S, K, D)
+    out = jnp.sum(per_slot * gate[..., None].astype(dt), axis=1)
+
+    if e.n_shared:
+        xs = xg.astype(dt)[None].repeat(e.n_shared, 0)       # (n_shared,S,D)
+        out = out + jnp.sum(_expert_ffn(p["shared"], xs, cfg), axis=0)
+    return out, aux
+
+
+def moe_ffn(p, cfg: ModelConfig, x: jax.Array):
+    """x: (B, T, D) → (out, aux_loss).
+
+    Routing groups are BATCH ROWS (vmapped dispatch): capacity is enforced
+    per row and the whole dispatch — top-k, argsort permutation, gathers —
+    stays local to the row's data shard (no cross-device sort).  The expert
+    dimension of the (B, E, C, D) buffer then reshards onto the EP/TP axis
+    through the grouped GEMM (XLA's all-to-all).  Small inputs (decode: one
+    token per row) take the single-group path on the flattened batch."""
+    from repro.parallel import autoshard
+
+    B, T, D = x.shape
+    if B * T <= GROUP or T == 1:
+        out, aux = _dispatch_group(p, cfg, x.reshape(B * T, D))
+        return out.reshape(B, T, D), aux
+    outs, auxs = jax.vmap(lambda xg: _dispatch_group(p, cfg, xg))(x)
+    outs = autoshard.hidden(outs)
+    return outs, jnp.mean(auxs)

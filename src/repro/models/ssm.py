@@ -1,0 +1,226 @@
+"""State-space sequence mixers: RWKV-6 ("Finch", data-dependent decay) and
+Mamba (for Jamba's hybrid stack).
+
+Both are implemented as chunked recurrences: an outer ``lax.scan`` over
+chunks carries the O(1) recurrent state; the chunk body is
+``jax.checkpoint``-ed so the backward pass stores only chunk-boundary
+states (T/C small tensors) instead of per-step carries — the COPIFT Step-4
+tiling argument applied to the time axis (see DESIGN.md §6).
+
+Decode (serve_step) runs the same cell for a single step, carrying
+(shift/conv state, recurrent state) — O(1) memory at 500 k context, which
+is exactly why rwkv6/jamba own the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+CHUNK = 128
+
+
+def _chunked_scan(cell, state, xs_t, chunk: int = CHUNK):
+    """scan cell over time with chunk-boundary checkpointing.
+    xs_t: pytree of (T, ...) arrays; returns (state, ys (T, ...))."""
+    T = jax.tree_util.tree_leaves(xs_t)[0].shape[0]
+    if T <= chunk:
+        return jax.lax.scan(cell, state, xs_t)
+    assert T % chunk == 0, (T, chunk)
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(T // chunk, chunk, *a.shape[1:]), xs_t)
+
+    @jax.checkpoint
+    def chunk_body(state, xc):
+        return jax.lax.scan(cell, state, xc)
+
+    state, ys = jax.lax.scan(chunk_body, state, xs_c)
+    return state, jax.tree.map(
+        lambda a: a.reshape(T, *a.shape[2:]), ys)
+
+
+# ===========================================================================
+# RWKV-6 time mix
+# ===========================================================================
+
+def init_rwkv6(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hs = cfg.ssm.head_dim
+    H = d // hs
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    lora_r, lora_w = 32, 64
+
+    def lora(k, rank):
+        k1, k2 = jax.random.split(k)
+        return {"a": L.init_linear(k1, d, rank, dt),
+                "b": L.init_linear(k2, rank, d, dt, scale=rank ** -0.5)}
+
+    p = {
+        "mu_x": jnp.zeros((d,), dt), "mu_w": jnp.zeros((d,), dt),
+        "mu_k": jnp.zeros((d,), dt), "mu_v": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt), "mu_g": jnp.zeros((d,), dt),
+        "w0": jnp.full((d,), -6.0, dt),          # decay bias (slow default)
+        "u": (jax.random.normal(ks[0], (H, hs), jnp.float32) * 0.1).astype(dt),
+        "lora_w": lora(ks[1], lora_w),
+        "r": L.init_linear(ks[2], d, d, dt), "k": L.init_linear(ks[3], d, d, dt),
+        "v": L.init_linear(ks[4], d, d, dt), "g": L.init_linear(ks[5], d, d, dt),
+        "o": L.init_linear(ks[6], d, d, dt, scale=d ** -0.5),
+        "ln_x": L.init_norm("layernorm", d, dt),  # per-head group norm
+    }
+    return p
+
+
+def rwkv6_mix(p, cfg: ModelConfig, x, state=None):
+    """x: (B, T, D) → (out, state).  state = (x_prev (B,D), S (B,H,hs,hs))."""
+    dt = jnp.dtype(cfg.dtype)
+    B, T, D = x.shape
+    hs = cfg.ssm.head_dim
+    H = D // hs
+    if state is None:
+        x_prev = jnp.zeros((B, D), dt)
+        S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    else:
+        x_prev, S0 = state
+
+    xx = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # token shift
+    mu = lambda name: p[f"mu_{name}"].astype(dt)
+    xw = x + (xx - x) * mu("w")
+    xk = x + (xx - x) * mu("k")
+    xv = x + (xx - x) * mu("v")
+    xr = x + (xx - x) * mu("r")
+    xg = x + (xx - x) * mu("g")
+
+    # Data-dependent decay (the Finch contribution): per-token, per-channel.
+    lw = jnp.tanh(L.linear(p["lora_w"]["a"], xw, dt))
+    w_log = p["w0"].astype(jnp.float32) + \
+        L.linear(p["lora_w"]["b"], lw, dt).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                              # (B,T,D) in (0,1)
+
+    r = L.linear(p["r"], xr, dt).reshape(B, T, H, hs)
+    k = L.linear(p["k"], xk, dt).reshape(B, T, H, hs)
+    v = L.linear(p["v"], xv, dt).reshape(B, T, H, hs)
+    g = jax.nn.silu(L.linear(p["g"], xg, dt))
+    u = p["u"].astype(jnp.float32)
+    wh = w.reshape(B, T, H, hs)
+
+    def cell(S, inp):
+        r_t, k_t, v_t, w_t = inp                              # (B,H,hs)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32),
+                        v_t.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r_t.astype(jnp.float32),
+                       S + u[None, :, :, None] * kv)
+        S = w_t.astype(jnp.float32)[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, wh))  # (T,B,H,hs)
+    S, ys = _chunked_scan(cell, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, D).astype(dt)
+    y = L.norm("layernorm", p["ln_x"], y)                     # group norm
+    out = L.linear(p["o"], y * g, dt)
+    return out, (x[:, -1].astype(dt), S)
+
+
+def init_rwkv6_channel_mix(key, cfg: ModelConfig):
+    d, dff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"mu_k": jnp.zeros((d,), dt), "mu_r": jnp.zeros((d,), dt),
+            "k": L.init_linear(k1, d, dff, dt),
+            "v": L.init_linear(k2, dff, d, dt, scale=dff ** -0.5),
+            "r": L.init_linear(k3, d, d, dt)}
+
+
+def rwkv6_channel_mix(p, cfg: ModelConfig, x, x_prev=None):
+    """RWKV FFN ('channel mix'): squared-relu with receptance gate."""
+    dt = jnp.dtype(cfg.dtype)
+    B, T, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, D), dt)
+    xx = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xk = x + (xx - x) * p["mu_k"].astype(dt)
+    xr = x + (xx - x) * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(L.linear(p["k"], xk, dt)))
+    kv = L.linear(p["v"], k, dt)
+    return jax.nn.sigmoid(L.linear(p["r"], xr, dt)) * kv, x[:, -1].astype(dt)
+
+
+# ===========================================================================
+# Mamba (selective SSM) — Jamba's mixer
+# ===========================================================================
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    dtr = s.dt_rank or max(1, d // 16)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": L.init_linear(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, di), jnp.float32)
+                   * (s.d_conv * di) ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": L.init_linear(ks[2], di, dtr + 2 * s.d_state, dt),
+        "dt_proj": {"w": (jax.random.normal(ks[3], (dtr, di), jnp.float32)
+                          * dtr ** -0.5).astype(dt),
+                    "b": jnp.full((di,), -4.6, dt)},   # softplus⁻¹(0.01)
+        "A_log": jnp.log(A),                           # (di, d_state) fp32
+        "D": jnp.ones((di,), dt),
+        "out_proj": L.init_linear(ks[4], di, d, dt, scale=di ** -0.5),
+    }
+
+
+def mamba_mix(p, cfg: ModelConfig, x, state=None):
+    """x: (B, T, D) → (out, state).  state = (conv (B,K-1,di), h (B,di,ds))."""
+    dt = jnp.dtype(cfg.dtype)
+    s = cfg.ssm
+    B, T, D = x.shape
+    di = s.expand * D
+    dtr = s.dt_rank or max(1, D // 16)
+    K = s.d_conv
+
+    xz = L.linear(p["in_proj"], x, dt)
+    xin, z = jnp.split(xz, 2, axis=-1)                 # (B,T,di) each
+    if state is None:
+        conv_state = jnp.zeros((B, K - 1, di), dt)
+        h0 = jnp.zeros((B, di, s.d_state), jnp.float32)
+    else:
+        conv_state, h0 = state
+
+    # Causal depthwise conv via shifted adds (kernel K small).
+    xpad = jnp.concatenate([conv_state, xin], axis=1)  # (B, T+K-1, di)
+    conv = sum(xpad[:, i:i + T] * p["conv_w"][i].astype(dt) for i in range(K))
+    xc = jax.nn.silu(conv + p["conv_b"].astype(dt))
+
+    proj = L.linear(p["x_proj"], xc, dt)
+    dt_in, Bmat, Cmat = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    delta = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ p["dt_proj"]["w"].astype(jnp.float32)
+        + p["dt_proj"]["b"].astype(jnp.float32))       # (B,T,di)
+    A = -jnp.exp(p["A_log"])                           # (di, ds)
+
+    def cell(h, inp):
+        xc_t, d_t, B_t, C_t = inp                      # (B,di),(B,di),(B,ds)
+        dA = jnp.exp(d_t[..., None] * A[None])         # (B,di,ds)
+        dBx = d_t[..., None] * B_t[:, None, :].astype(jnp.float32) \
+            * xc_t[..., None].astype(jnp.float32)
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(delta, 1, 0),
+          jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0))
+    h, ys = _chunked_scan(cell, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(dt) + xc * p["D"].astype(dt)
+    out = L.linear(p["out_proj"], y * jax.nn.silu(z), dt)
+    new_conv = xpad[:, -(K - 1):] if K > 1 else conv_state
+    return out, (new_conv, h)

@@ -1,0 +1,55 @@
+"""Gradient compression for the slow cross-pod (DCI) axis: int8
+quantization with error feedback.
+
+``quantize_dequantize`` is the numerical core (per-tensor absmax int8);
+``ErrorFeedback`` carries the residual so the quantization error is
+re-injected next step — the standard EF-SGD construction that keeps
+convergence despite 4× payload reduction.  ``compressed_psum`` is the
+shard_map building block used when training spans pods
+(``--compress-pod-grads``).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_dequantize(g: jax.Array):
+    """Per-tensor absmax int8 round-trip. Returns (g_hat, residual)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    g_hat = q.astype(jnp.float32) * scale
+    return g_hat, g - g_hat
+
+
+def ef_init(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress(grads: Any, error: Any):
+    """Error-feedback compression: quantize (g + e), carry the residual."""
+    def one(g, e):
+        g_hat, resid = quantize_dequantize(g.astype(jnp.float32) + e)
+        return g_hat, resid
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    g_hat = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return g_hat, new_e
+
+
+def compressed_psum(g: jax.Array, axis_name: str):
+    """shard_map collective: int8-quantize, all-reduce the int payload,
+    dequantize.  Scales are all-reduced at fp32 (negligible bytes)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    # Sum int8 payloads in int32 to avoid overflow across the axis.
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    # Each shard contributed its own scale; use the max scale (conservative).
+    max_scale = jax.lax.pmax(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return summed.astype(jnp.float32) * max_scale / n

@@ -1,0 +1,227 @@
+"""Sharding rules: param-path → PartitionSpec (TP over "model", ZeRO/FSDP
+over "data", DP over ("pod","data")), plus activation/cache specs per shape.
+
+Rules are suffix-matched on the param path, applied to the TRAILING dims of
+each leaf (scan-stacked leading dims — periods, experts where noted — get
+None/EP).  One function, one table: auditable and testable
+(tests/test_sharding.py asserts divisibility against every arch config).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+#: FSDP (ZeRO-3-style param sharding over "data") kicks in above this size.
+FSDP_THRESHOLD = 500_000_000
+#: Below this size, tensor parallelism is counterproductive at 256 chips —
+#: the 2 activation all-reduces/layer dwarf everything a small model does.
+#: The model axis is folded into data parallelism instead (§Perf it.5:
+#: olmo-1b train collective traffic fell ~20× from this rule).
+TP_THRESHOLD = 8_000_000_000
+
+
+def _divisible(dim: int | None, size: int) -> bool:
+    return dim is not None and dim % size == 0
+
+
+class ShardingRules:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh,
+                 shape: ShapeConfig | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        # TP only pays for big models — BUT folding the model axis into DP
+        # requires the global batch to actually fill the widened DP extent
+        # (otherwise activations replicate across the idle axis, which is
+        # strictly worse).  Shape-aware: small model + divisible batch → DP.
+        full_dp = 1
+        for a in ("pod", "data", "model"):
+            full_dp *= mesh.shape.get(a, 1)
+        batch_fills = (shape is None
+                       or shape.global_batch % full_dp == 0)
+        self.use_tp = (cfg.n_params() > TP_THRESHOLD) or not batch_fills
+        self.model = mesh.shape.get("model", 1) if self.use_tp else 1
+        self.data = mesh.shape.get("data", 1)
+        self.fsdp = cfg.n_params() > FSDP_THRESHOLD
+        dp = [a for a in ("pod", "data") if a in mesh.shape]
+        if not self.use_tp and "model" in mesh.shape:
+            dp.append("model")           # model axis becomes extra DP/ZeRO
+        self.dp_axes = tuple(dp)
+        ep = (cfg.moe is not None and self.use_tp
+              and cfg.moe.n_experts % self.model == 0)
+        self.ep = ep
+
+    # -- helpers ----------------------------------------------------------
+    @property
+    def _zero_axes(self) -> tuple[str, ...]:
+        """ZeRO/FSDP axes: data (+ the folded model axis when TP is off);
+        never across the pod DCI."""
+        axes = ["data"]
+        if not self.use_tp and "model" in self.mesh.shape:
+            axes.append("model")
+        return tuple(axes)
+
+    def _d(self, dim: int):
+        """FSDP axes for a replicated-dim if divisible."""
+        if not self.fsdp:
+            return None
+        import numpy as _np
+        axes = self._zero_axes
+        size = int(_np.prod([self.mesh.shape[a] for a in axes]))
+        if _divisible(dim, size):
+            return axes if len(axes) > 1 else axes[0]
+        return "data" if _divisible(dim, self.data) else None
+
+    def _m(self, dim: int) -> str | None:
+        if not self.use_tp:
+            return None                # model axis folded into DP (§Perf it.5)
+        return "model" if _divisible(dim, self.model) else None
+
+    # -- the rule table ----------------------------------------------------
+    def param_spec(self, path: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        s = "/".join(path)
+        nd = len(shape)
+
+        def tail(*axes):
+            """Pad with leading Nones to the leaf's rank."""
+            return P(*([None] * (nd - len(axes)) + list(axes)))
+
+        cfg = self.cfg
+        # ---- embeddings / head
+        if s.endswith("embed/table"):
+            return tail(self._m(shape[-2]), self._d(shape[-1]))
+        if s.endswith("head/w"):
+            return tail(self._d(shape[-2]), self._m(shape[-1]))
+        # ---- MoE expert banks: leaf (E, d_in, d_out) (+ optional stack dim)
+        if "/experts/" in s or "/shared/" in s:
+            e_axis = "model" if (self.ep and "/experts/" in s
+                                 and _divisible(shape[-3], self.model)) else None
+            if s.endswith(("up", "gate")):
+                inner = self._m(shape[-1]) if e_axis is None else None
+                return tail(e_axis, self._d(shape[-2]), inner)
+            inner = self._m(shape[-2]) if e_axis is None else None
+            return tail(e_axis, inner, self._d(shape[-1]))     # down
+        if s.endswith("router/w"):
+            return tail(self._d(shape[-2]), None)
+        # ---- attention
+        if re.search(r"attn/(q|k|v)/w$", s):
+            return tail(self._d(shape[-2]), self._m(shape[-1]))
+        if s.endswith("attn/o/w"):
+            return tail(self._m(shape[-2]), self._d(shape[-1]))
+        # ---- dense FFN
+        if re.search(r"ffn/(up|gate)/w$", s):
+            return tail(self._d(shape[-2]), self._m(shape[-1]))
+        if s.endswith("ffn/down/w"):
+            return tail(self._m(shape[-2]), self._d(shape[-1]))
+        # ---- mamba
+        if s.endswith("in_proj/w"):
+            return tail(self._d(shape[-2]), self._m(shape[-1]))
+        if s.endswith("conv_w"):
+            return tail(None, self._m(shape[-1]))
+        if s.endswith(("conv_b", "D")):
+            return tail(self._m(shape[-1]))
+        if s.endswith("x_proj/w"):
+            return tail(self._m(shape[-2]), None)
+        if s.endswith("dt_proj/w"):
+            return tail(None, self._m(shape[-1]))
+        if s.endswith(("dt_proj/b",)):
+            return tail(self._m(shape[-1]))
+        if s.endswith("A_log"):
+            return tail(self._m(shape[-2]), None)
+        if s.endswith("out_proj/w"):
+            return tail(self._m(shape[-2]), self._d(shape[-1]))
+        # ---- rwkv6
+        if re.search(r"rwkv/(r|k|v|g)/w$", s):
+            return tail(self._d(shape[-2]), self._m(shape[-1]))
+        if s.endswith("rwkv/o/w"):
+            return tail(self._m(shape[-2]), self._d(shape[-1]))
+        if s.endswith("cmix/k/w"):
+            return tail(self._d(shape[-2]), self._m(shape[-1]))
+        if s.endswith("cmix/v/w"):
+            return tail(self._m(shape[-2]), self._d(shape[-1]))
+        if s.endswith("cmix/r/w"):
+            return tail(self._d(shape[-2]), None)
+        # ---- everything small (norms, biases, mus, loras, u): replicated
+        return P(*([None] * nd))
+
+    # -- pytree application -------------------------------------------------
+    def params_pspecs(self, params_shape: Any):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+        specs = []
+        for kp, leaf in flat:
+            path = tuple(_key_name(k) for k in kp)
+            specs.append(self.param_spec(path, leaf.shape))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def params_shardings(self, params_shape: Any):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.params_pspecs(params_shape),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # -- activations / data ---------------------------------------------------
+    def batch_spec(self, shape: ShapeConfig) -> P:
+        """(B, T) spec: batch over the largest DP-axis prefix that divides
+        it, else sequence sharding (SP — the long_500k batch=1 case)."""
+        dp = self.dp_axes
+        for take in range(len(dp), 0, -1):
+            axes = dp[:take]
+            size = int(np.prod([self.mesh.shape[a] for a in axes]))
+            if shape.global_batch % size == 0:
+                return P(axes, None)
+        dp_size = int(np.prod([self.mesh.shape[a] for a in dp]))
+        if shape.seq_len % dp_size == 0 and shape.global_batch == 1:
+            return P(None, dp)
+        return P(None, None)
+
+    def kv_cache_spec(self) -> P:
+        """(L, B, S, Hkv, Dh): B over data when divisible (decode batches),
+        else S over data (long-context, batch=1); Dh over model."""
+        return None  # resolved per-shape in cache_pspecs
+
+    def cache_pspecs(self, cache_shape: Any, shape: ShapeConfig):
+        dp = self.dp_axes
+        dp_size = int(np.prod([self.mesh.shape[a] for a in dp]))
+        batch_on_dp = shape.global_batch % dp_size == 0
+
+        def spec(kp, leaf):
+            nd = len(leaf.shape)
+            path = "/".join(_key_name(k) for k in kp)
+            if path.endswith(("/k", "/v")) and nd >= 4:
+                # (..., B, S, Hkv, Dh)
+                b = dp if batch_on_dp and leaf.shape[-4] % dp_size == 0 else None
+                s_ax = None if b is not None else (
+                    dp if leaf.shape[-3] % dp_size == 0 else None)
+                m = "model" if leaf.shape[-1] % self.model == 0 else None
+                return P(*([None] * (nd - 4) + [b, s_ax, None, m]))
+            # Recurrent states (mamba/rwkv/shift): shard the batch dim (the
+            # first dim matching global_batch) over DP when divisible;
+            # otherwise replicate (they are O(1)-sized at batch=1).
+            for i in range(nd):
+                if leaf.shape[i] == shape.global_batch and batch_on_dp:
+                    return P(*([None] * i + [dp] + [None] * (nd - i - 1)))
+            return P(*([None] * nd))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+        return jax.tree_util.tree_unflatten(
+            treedef, [spec(kp, leaf) for kp, leaf in flat])
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def constrain(x, mesh: Mesh | None, spec: P):
+    """with_sharding_constraint that degrades to a no-op without a mesh."""
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,1 @@
+"""serve substrate (see DESIGN.md §4)."""

@@ -1,0 +1,99 @@
+"""Serving: prefill + single-token decode steps (what the decode_32k /
+long_500k dry-run cells lower), and a batched generation engine.
+
+The decode step is ONE new token against a seq_len-deep cache: attention
+layers read/write the KV cache at ``cache_index``; mamba/rwkv layers carry
+O(1) recurrent state (why the SSM/hybrid archs own the 500k cell).
+Sampling uses the paper's xoshiro128+ kernel — even the serving path runs
+COPIFT machinery.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.model import forward
+from repro.models.transformer import init_stack_cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return init_stack_cache(cfg, batch, max_len)
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens (B,1), cache_index) →
+    (logits (B,V), new_cache)."""
+
+    def serve_step(params, cache, tokens, cache_index):
+        logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
+                                       cache=cache, cache_index=cache_index,
+                                       logits_mode="last")
+        return logits[:, 0], new_cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    """prefill(params, cache, tokens (B,T)) → (last_logits, cache)."""
+
+    def prefill(params, cache, tokens):
+        logits, new_cache, _ = forward(params, cfg, {"tokens": tokens},
+                                       cache=cache, cache_index=0,
+                                       logits_mode="last")
+        return logits[:, 0], new_cache
+
+    return prefill
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, prompt+generated)
+    steps: int
+
+
+class ServeEngine:
+    """Batched greedy/temperature decoding over a fixed slot set."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 batch: int = 4, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch = batch
+        self.temperature = temperature
+        self.seed = seed
+        self._prefill = jax.jit(make_prefill(cfg))
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def _sample(self, logits: jax.Array, step: int) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        # Gumbel trick with xoshiro uniforms (the paper's PRNG).
+        u = kops.uniform(self.seed + step, logits.shape)
+        g = -jnp.log(-jnp.log(jnp.maximum(u, 1e-12)))
+        return jnp.argmax(logits / self.temperature + g, axis=-1)
+
+    def generate(self, prompts: np.ndarray, n_steps: int) -> GenerationResult:
+        """prompts: (B, P) int32; greedy-decodes n_steps tokens."""
+        B, plen = prompts.shape
+        assert B == self.batch and plen + n_steps <= self.max_len
+        cache = make_cache(self.cfg, B, self.max_len)
+        logits, cache = self._prefill(self.params, cache,
+                                      jnp.asarray(prompts, jnp.int32))
+        out = [jnp.asarray(prompts, jnp.int32)]
+        tok = self._sample(logits, 0)[:, None]
+        for i in range(1, n_steps):
+            out.append(tok)
+            logits, cache = self._step(self.params, cache, tok,
+                                       jnp.int32(plen + i - 1))
+            tok = self._sample(logits, i)[:, None]
+        out.append(tok)
+        return GenerationResult(np.asarray(jnp.concatenate(out, 1)), n_steps)

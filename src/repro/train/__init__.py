@@ -1,0 +1,1 @@
+"""train substrate (see DESIGN.md §4)."""

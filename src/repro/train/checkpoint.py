@@ -1,0 +1,105 @@
+"""Checkpointing: msgpack-serialized pytrees, atomic writes, async saver,
+mesh-agnostic restore (arrays are saved as logical/global values, so a
+checkpoint written on one mesh restores onto any other — the elastic-
+rescale path in fault.py depends on this).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any
+
+import msgpack
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(k.key) if hasattr(k, "key") else str(k.idx)
+                       for k in kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    return {"dtype": a.dtype.str if a.dtype != jnp.bfloat16 else "bfloat16",
+            "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    dt = jnp.bfloat16 if d["dtype"] == "bfloat16" else np.dtype(d["dtype"])
+    return np.frombuffer(d["data"], dtype=dt).reshape(d["shape"])
+
+
+def save(path: str, tree: Any, meta: dict | None = None) -> None:
+    """Atomic: write to .tmp, fsync, rename."""
+    payload = {"meta": meta or {},
+               "arrays": {k: _pack_array(v) for k, v in _flatten(tree).items()}}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+
+
+def load(path: str, like: Any | None = None, shardings: Any | None = None):
+    """returns (tree, meta).  With ``like`` the stored flat dict is
+    re-inflated into that treedef (keys must match); with ``shardings`` each
+    leaf is device_put with its NamedSharding — restoring onto a different
+    mesh than the writer's is exactly this call with new shardings."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = {k: _unpack_array(v) for k, v in payload["arrays"].items()}
+    if like is None:
+        return arrays, payload["meta"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = jax.tree.leaves(shardings) if shardings is not None else \
+        [None] * len(flat)
+    leaves = []
+    for (kp, leaf), sh in zip(flat, shard_flat):
+        key = "/".join(str(k.key) if hasattr(k, "key") else str(k.idx)
+                       for k in kp)
+        a = arrays[key]
+        assert tuple(a.shape) == tuple(leaf.shape), (key, a.shape, leaf.shape)
+        leaves.append(jax.device_put(a, sh) if sh is not None
+                      else jnp.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, leaves), payload["meta"]
+
+
+class AsyncSaver:
+    """Background-thread checkpoint writer: training continues while the
+    previous step's state (already device→host copied) serializes."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self.last_error: Exception | None = None
+
+    def submit(self, path: str, tree: Any, meta: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # sync copy, then async IO
+
+        def work():
+            try:
+                save(path, host_tree, meta)
+            except Exception as e:                    # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

@@ -1,0 +1,99 @@
+"""AdamW, implemented from scratch (no optax in this environment).
+
+State dtype is configurable per-arch (``cfg.opt_state_dtype``): fp32 moments
+by default; bf16 for the largest archs (grok-1) so optimizer state fits the
+ZeRO shard budget — the trade-off is documented in DESIGN.md §6.  Moments
+inherit the parameter sharding (ZeRO-1: same PartitionSpecs → the "data"
+axis shards optimizer state wherever it shards params).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(c: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = c.lr * step / max(1, c.warmup_steps)
+    t = jnp.clip((step - c.warmup_steps)
+                 / max(1, c.total_steps - c.warmup_steps), 0.0, 1.0)
+    cos = c.lr * (c.min_lr_ratio
+                  + (1 - c.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any, dtype: str = "float32") -> dict:
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def _is_matrix(path: tuple) -> bool:
+    """Weight decay applies to matrices only (not norms/biases/scalars)."""
+    leafname = str(path[-1].key) if hasattr(path[-1], "key") else ""
+    return leafname in ("w", "table", "up", "down", "gate") or leafname == ""
+
+
+def adamw_update(c: AdamWConfig, params: Any, grads: Any, state: dict):
+    """returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, c.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(c, step)
+    b1, b2 = c.beta1, c.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + c.eps)
+        if c.weight_decay and _is_matrix(path) and p.ndim >= 2:
+            upd = upd + c.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(mf.astype(m.dtype))
+        new_v.append(vf.astype(v.dtype))
+
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_state = {"m": jax.tree_util.tree_unflatten(treedef, new_m),
+                 "v": jax.tree_util.tree_unflatten(treedef, new_v),
+                 "step": step}
+    return params, new_state, {"lr": lr, "grad_norm": gn}

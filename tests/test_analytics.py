@@ -1,0 +1,65 @@
+"""Paper Table I and Eq. 1–3 — exact reproduction of every derived column."""
+
+import pytest
+
+from repro.core.analytics import (PAPER_HEADLINE, TABLE_I, TABLE_I_PRINTED,
+                                  geomean, table_rows)
+from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
+
+
+class TestTableI:
+    @pytest.mark.parametrize("name", list(TABLE_I))
+    def test_derived_columns_match_paper(self, name):
+        """TI, I', S'', S' as printed in Table I (paper rounds to 2 dp,
+        except logf S'=1.6 and expf TI=0.83)."""
+        k = TABLE_I[name]
+        p = TABLE_I_PRINTED[name]
+        assert k.thread_imbalance == pytest.approx(p["ti"], abs=0.005)
+        assert k.i_prime == pytest.approx(p["i_prime"], abs=0.005)
+        assert k.s_double_prime == pytest.approx(p["s_pp"], abs=0.005)
+        assert k.s_prime == pytest.approx(p["s_prime"], abs=0.005)
+
+    def test_equation3_identity(self):
+        """Eq. 3 uses a+b = max(a,b)+min(a,b): S'' == 1+TI for any counts."""
+        for k in TABLE_I.values():
+            a, b = k.n_int_base, k.n_fp_base
+            assert (a + b) / max(a, b) == pytest.approx(
+                1 + min(a, b) / max(a, b))
+
+    def test_ordering_by_expected_speedup(self):
+        rows = table_rows()
+        s = [r["s_prime"] for r in rows]
+        assert s == sorted(s, reverse=True)
+        assert rows[0]["kernel"] == "expf"          # S' = 2.21, top row
+
+    @pytest.mark.parametrize("name", KERNELS)
+    def test_our_traces_reproduce_counts(self, name):
+        """The instruction-level transcriptions in kernels_isa must have
+        exactly the Table I counts (this is the contract that keeps the
+        timing/energy models honest)."""
+        row = TABLE_I[name]
+        base = baseline_trace(name)
+        cft = copift_schedule(name)
+        assert base.n_int == row.n_int_base
+        assert base.n_fp == row.n_fp_base
+        assert cft.n_int == row.n_int_copift
+        assert cft.n_fp == row.n_fp_copift
+
+    def test_isa_extension_requirements(self):
+        """Kernels marked *† in Table I use the cft.* custom-1 opcodes; expf
+        (unmarked) must use none."""
+        for name in KERNELS:
+            cft = copift_schedule(name)
+            ops = {i.opcode for b in cft.fp_bodies for i in b}
+            uses_ext = any(o.startswith("cft.") for o in ops)
+            needs = TABLE_I[name].needs_fcvt_d_w or TABLE_I[name].needs_flt_d
+            assert uses_ext == needs, name
+
+    def test_geomean(self):
+        assert geomean([2.0, 8.0]) == pytest.approx(4.0)
+        assert geomean([1.47]) == pytest.approx(1.47)
+
+
+def test_headline_constants_present():
+    for key in ("geomean_speedup", "peak_ipc", "geomean_energy_saving"):
+        assert key in PAPER_HEADLINE

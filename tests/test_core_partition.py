@@ -1,0 +1,95 @@
+"""COPIFT Steps 1–3: DFG construction, typing, and phase partitioning."""
+
+import networkx as nx
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DepType, Domain, build_dfg, partition, reorder)
+from repro.core.dfg import cross_edges
+from repro.core.kernels_isa import KERNELS, baseline_trace
+
+
+class TestPaperKernels:
+    def test_expf_has_paper_phase_structure(self):
+        """Paper Fig. 1c/1d: expf partitions into FP phase 0 → INT phase 1 →
+        FP phase 2 with exactly 4 int↔fp cut edges."""
+        part = partition(build_dfg(baseline_trace("expf")))
+        assert [p.domain for p in part.phases] == [Domain.FP, Domain.INT,
+                                                   Domain.FP]
+        assert part.n_cross_cuts == 4
+        # expf's cut edges are all memory deps (kd spill + t/s reloads) —
+        # why Table I marks expf as needing no COPIFT ISA extension.
+        assert all(d in (DepType.STA_MEM, DepType.DYN_MEM)
+                   for _, _, d in part.cross_cuts)
+
+    def test_logf_has_issr_dependencies(self):
+        """logf's table gathers are Type-1 (dynamic memory) dependencies —
+        the ones the paper maps to ISSRs."""
+        part = partition(build_dfg(baseline_trace("logf")))
+        types = [d for _, _, d in part.cross_cuts]
+        assert DepType.DYN_MEM in types          # → ISSR
+        assert DepType.REG in types              # → cft.fcvt.d.w
+        assert [p.domain for p in part.phases] == [Domain.FP, Domain.INT,
+                                                   Domain.FP]
+
+    @pytest.mark.parametrize("name", ["poly_lcg", "pi_lcg",
+                                      "poly_xoshiro128p", "pi_xoshiro128p"])
+    def test_monte_carlo_int_then_fp(self, name):
+        """MC kernels: PRN generation (int) feeds evaluation (fp) through
+        register (Type-3) dependencies — 2 draws × 4 samples = 8 cuts."""
+        part = partition(build_dfg(baseline_trace(name)))
+        assert [p.domain for p in part.phases] == [Domain.INT, Domain.FP]
+        assert part.n_cross_cuts == 8
+        assert all(d is DepType.REG for _, _, d in part.cross_cuts)
+
+    @pytest.mark.parametrize("name", KERNELS)
+    def test_partition_invariants(self, name):
+        g = build_dfg(baseline_trace(name))
+        part = partition(g)
+        part.validate(g)  # acyclic forward order + domain purity
+        # Every node assigned exactly once.
+        seen = [n for ph in part.phases for n in ph.nodes]
+        assert sorted(seen) == sorted(g.nodes)
+
+    @pytest.mark.parametrize("name", KERNELS)
+    def test_reorder_is_permutation(self, name):
+        trace = baseline_trace(name)
+        part = partition(build_dfg(trace))
+        order = reorder(len(trace.instrs), part)
+        assert sorted(order) == list(range(len(trace.instrs)))
+
+
+def _random_dag(draw_edges, n):
+    g = nx.DiGraph()
+    doms = [Domain.INT, Domain.FP]
+    for i in range(n):
+        g.add_node(i, opcode="x", domain=doms[i % 2 if i % 3 else 0], weight=1)
+    for (u, v) in draw_edges:
+        if u < v:
+            g.add_edge(u, v, dep=DepType.REG)
+    return g
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 40), st.data())
+def test_partition_random_dags(n, data):
+    """Property: on random DAGs with mixed domains, the partition is always
+    a valid acyclic, domain-pure phase cover of all nodes."""
+    edges = data.draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        max_size=3 * n))
+    g = _random_dag(edges, n)
+    part = partition(g)
+    part.validate(g)
+    seen = sorted(n_ for ph in part.phases for n_ in ph.nodes)
+    assert seen == sorted(g.nodes)
+    # Cut edges reported = edges crossing phases.
+    n_crossing = sum(1 for u, v in g.edges()
+                     if part.node_phase[u] != part.node_phase[v])
+    assert part.n_cuts == n_crossing
+
+
+def test_cross_edges_typed():
+    g = build_dfg(baseline_trace("expf"))
+    for u, v, dep in cross_edges(g):
+        assert dep is not DepType.INTRA

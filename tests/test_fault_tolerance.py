@@ -1,0 +1,138 @@
+"""Fault-tolerance integration tests: kill a real training run mid-flight,
+restart, and verify the continuation — plus elastic re-shard onto a
+different device mesh (subprocess with a different host-device count)."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+
+
+def _run_train(args, env=None, **kw):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        cwd=REPO, env=env or ENV, capture_output=True, text=True,
+        timeout=420, **kw)
+
+
+@pytest.mark.slow
+class TestCrashResume:
+    def test_kill_and_resume_reaches_completion(self, tmp_path):
+        ckpt_dir = str(tmp_path / "ck")
+        metrics = str(tmp_path / "m.json")
+        # 300 steps ≈ 15-20 s of post-compile run time: the kill reliably
+        # lands mid-run (a 30-step run can finish inside one poll interval).
+        args = ["--arch", "olmo-1b", "--variant", "smoke", "--steps", "300",
+                "--batch", "4", "--seq", "64", "--ckpt-dir", ckpt_dir,
+                "--ckpt-every", "20", "--metrics-out", metrics]
+        # Start, then kill mid-run (SIGKILL — a real crash).
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.train"] + args,
+            cwd=REPO, env=ENV, stdout=subprocess.PIPE, text=True)
+        deadline = time.time() + 300
+        killed = False
+        while time.time() < deadline:
+            if any(f.startswith("step_") for f in
+                   (os.listdir(ckpt_dir) if os.path.isdir(ckpt_dir) else [])):
+                time.sleep(1.0)
+                proc.kill()
+                killed = True
+                break
+            if proc.poll() is not None:
+                break
+            time.sleep(0.5)
+        proc.wait()
+        assert killed, "run finished before a checkpoint appeared"
+
+        # Restart: must resume from the checkpoint, not step 0.
+        r = _run_train(args)
+        assert r.returncode == 0, r.stderr
+        assert "[resume] from step" in r.stdout
+        hist = json.load(open(metrics))
+        assert hist, "resumed run recorded no steps (kill landed at the end?)"
+        assert hist[-1]["step"] == 299
+        assert hist[0]["step"] > 0
+
+    def test_resumed_batches_identical(self, tmp_path):
+        """Determinism contract: a resumed run consumes the same data as an
+        uninterrupted one (pipeline is (seed, step)-keyed)."""
+        m1 = str(tmp_path / "a.json")
+        m2 = str(tmp_path / "b.json")
+        base = ["--arch", "olmo-1b", "--variant", "smoke", "--batch", "4",
+                "--seq", "64"]
+        r = _run_train(base + ["--steps", "12", "--metrics-out", m1,
+                               "--ckpt-dir", str(tmp_path / "c1"),
+                               "--ckpt-every", "6"])
+        assert r.returncode == 0, r.stderr
+        # Second run: stop at 6 (checkpoint), then continue to 12.
+        r = _run_train(base + ["--steps", "6",
+                               "--ckpt-dir", str(tmp_path / "c2"),
+                               "--ckpt-every", "6"])
+        assert r.returncode == 0, r.stderr
+        r = _run_train(base + ["--steps", "12", "--metrics-out", m2,
+                               "--ckpt-dir", str(tmp_path / "c2"),
+                               "--ckpt-every", "6"])
+        assert r.returncode == 0, r.stderr
+        h1 = {d["step"]: d["loss"] for d in json.load(open(m1))}
+        h2 = {d["step"]: d["loss"] for d in json.load(open(m2))}
+        # Cross-process tolerance: XLA:CPU re-compiles may change reduction
+        # splits (~1e-3 relative); in-process determinism is pinned exactly
+        # by tests/test_system.py::test_training_is_deterministic.
+        for s in range(6, 12):
+            assert h1[s] == pytest.approx(h2[s], rel=2e-2), s
+
+
+@pytest.mark.slow
+class TestElastic:
+    def test_restore_onto_different_mesh(self, tmp_path):
+        """Save under an 8-device mesh, restore under 4 — the elastic
+        shrink after losing hosts.  Runs in subprocesses because the
+        host-device count is locked at jax init."""
+        script = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import jax, jax.numpy as jnp
+from repro.configs import load_config
+from repro.models.model import init_params
+from repro.parallel.sharding import ShardingRules
+from repro.launch.mesh import make_mesh
+from repro.train.fault import CheckpointManager, elastic_restore
+
+n = int(sys.argv[1]); mode = sys.argv[2]; path = sys.argv[3]
+cfg = load_config("olmo-1b", "smoke")
+mesh = make_mesh((n // 2, 2), ("data", "model"))
+rules = ShardingRules(cfg, mesh)
+mgr = CheckpointManager(path, async_save=False)
+like = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(7)))
+if mode == "save":
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    mgr.save(11, params)
+    print("SAVED", float(jax.tree.leaves(params)[0].astype(jnp.float32).sum()))
+else:
+    params, step = elastic_restore(mgr, like, mesh,
+                                   lambda l: rules.params_shardings(l))
+    leaf = jax.tree.leaves(params)[0]
+    assert step == 11
+    assert len(leaf.sharding.device_set) >= 1
+    print("RESTORED", float(leaf.astype(jnp.float32).sum()))
+"""
+        path = str(tmp_path / "elastic")
+        r1 = subprocess.run([sys.executable, "-c", script, "8", "save", path],
+                            cwd=REPO, env=ENV, capture_output=True, text=True,
+                            timeout=240)
+        assert r1.returncode == 0, r1.stderr
+        r2 = subprocess.run([sys.executable, "-c", script, "4", "load", path],
+                            cwd=REPO, env=ENV, capture_output=True, text=True,
+                            timeout=240)
+        assert r2.returncode == 0, r2.stderr
+        v1 = float(r1.stdout.split()[-1])
+        v2 = float(r2.stdout.split()[-1])
+        assert v1 == pytest.approx(v2, rel=1e-6)
