@@ -1,0 +1,165 @@
+"""Benchmark: cluster scaling sweep — kernels × core counts × DVFS points.
+
+Sweeps the four paper kernel families across {1, 2, 4, 8, 16} cores and the
+cluster's DVFS ladder, reporting speedup (COPIFT cluster vs RV32G cluster),
+cluster-aggregate IPC, power and energy per element per cell.
+
+At ``--n-cores 1`` (nominal point) the rows reduce bit-for-bit to the
+single-PE fig2 numbers — the geomean speedup/energy-saving lines reproduce
+the paper's 1.47×/1.37× headline exactly as ``benchmarks/fig2.py`` prints
+them; that reduction is also asserted in ``tests/test_cluster.py``.
+
+CLI:
+    PYTHONPATH=src python benchmarks/cluster_sweep.py                # CSV
+    PYTHONPATH=src python benchmarks/cluster_sweep.py --n-cores 1
+    PYTHONPATH=src python benchmarks/cluster_sweep.py --n-cores 8 \
+        --json sweep.json                                           # JSON
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, evaluate_cluster,
+                           headline)
+from repro.core.kernels_isa import KERNELS
+
+DEFAULT_CORES = (1, 2, 4, 8, 16)
+
+
+def sweep_rows(cores=DEFAULT_CORES, points=None, kernels=None,
+               blocks_per_core: int = 1) -> list[dict]:
+    """One dict per (kernel × n_cores × operating point) cell."""
+    points = points if points is not None else SNITCH_CLUSTER.operating_points
+    kernels = kernels if kernels is not None else list(KERNELS)
+    rows = []
+    for n in cores:
+        cfg = SNITCH_CLUSTER.with_cores(n)
+        for pt in points:
+            for k in kernels:
+                r = evaluate_cluster(k, cfg, n, pt,
+                                     blocks_per_core=blocks_per_core)
+                rows.append(dict(
+                    kernel=k, n_cores=n, point=pt.name,
+                    freq_ghz=pt.freq_ghz, vdd=pt.vdd,
+                    speedup=r.speedup, ipc=r.ipc_copift,
+                    ipc_base=r.ipc_base,
+                    power_mw=r.power_copift_mw,
+                    power_ratio=r.power_ratio,
+                    energy_saving=r.energy_saving,
+                    energy_pj_per_elem=r.energy_pj_per_elem,
+                    time_us=r.time_us,
+                    extra_contention=r.extra_contention,
+                    dma_bound=r.dma_bound, imbalance=r.imbalance))
+    return rows
+
+
+def aggregate_rows(cores=DEFAULT_CORES, points=None,
+                   blocks_per_core: int = 1) -> list[dict]:
+    """fig2-style geomean aggregates per (n_cores × point) cell."""
+    points = points if points is not None else SNITCH_CLUSTER.operating_points
+    out = []
+    for n in cores:
+        cfg = SNITCH_CLUSTER.with_cores(n)
+        for pt in points:
+            res = [evaluate_cluster(k, cfg, n, pt,
+                                    blocks_per_core=blocks_per_core)
+                   for k in KERNELS]
+            agg = headline(res)
+            agg.update(n_cores=n, point=pt.name)
+            out.append(agg)
+    return out
+
+
+def sweep_json(cores=DEFAULT_CORES, blocks_per_core: int = 1) -> dict:
+    """The full scaling table as one JSON document (``--json``)."""
+    cfg = SNITCH_CLUSTER
+    return dict(
+        cluster=dict(tcdm_banks=cfg.tcdm_banks,
+                     dma_bytes_per_cycle=cfg.dma_bytes_per_cycle,
+                     operating_points=[dict(name=p.name, freq_ghz=p.freq_ghz,
+                                            vdd=p.vdd)
+                                       for p in cfg.operating_points]),
+        blocks_per_core=blocks_per_core,
+        rows=sweep_rows(cores, blocks_per_core=blocks_per_core),
+        aggregates=aggregate_rows(cores, blocks_per_core=blocks_per_core))
+
+
+def run() -> list[str]:
+    """CSV section for ``benchmarks/run.py``: the core-count sweep at the
+    nominal point, the full DVFS ladder at 8 cores, and the aggregates."""
+    lines = ["cluster.kernel,n_cores,point,speedup,ipc,power_mw,"
+             "energy_saving,energy_pj_per_elem"]
+    nominal_sweep = sweep_rows(points=(NOMINAL_POINT,))
+    dvfs_sweep = sweep_rows(cores=(8,))
+    seen = set()
+    for r in nominal_sweep + dvfs_sweep:
+        key = (r["kernel"], r["n_cores"], r["point"])
+        if key in seen:
+            continue
+        seen.add(key)
+        lines.append(
+            f"cluster.{r['kernel']},{r['n_cores']},{r['point']},"
+            f"{round(r['speedup'], 3)},{round(r['ipc'], 3)},"
+            f"{round(r['power_mw'], 2)},{round(r['energy_saving'], 3)},"
+            f"{round(r['energy_pj_per_elem'], 2)}")
+    lines.append("cluster.aggregate,n_cores,point,geomean_speedup,"
+                 "geomean_ipc_gain,geomean_power_ratio,"
+                 "geomean_energy_saving")
+    for agg in aggregate_rows(points=(NOMINAL_POINT,)):
+        lines.append(
+            f"cluster.aggregate,{agg['n_cores']},{agg['point']},"
+            f"{round(agg['geomean_speedup'], 3)},"
+            f"{round(agg['geomean_ipc_gain'], 3)},"
+            f"{round(agg['geomean_power_ratio'], 3)},"
+            f"{round(agg['geomean_energy_saving'], 3)}")
+    return lines
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-cores", type=str, default=None,
+                    help="comma-separated core counts (default 1,2,4,8,16)")
+    ap.add_argument("--blocks-per-core", type=int, default=1)
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the full sweep as JSON ('-' for stdout)")
+    args = ap.parse_args(argv)
+    if args.blocks_per_core < 1:
+        ap.error(f"--blocks-per-core must be >= 1, got {args.blocks_per_core}")
+    cores = DEFAULT_CORES
+    if args.n_cores:
+        try:
+            cores = tuple(int(c) for c in args.n_cores.split(","))
+        except ValueError:
+            ap.error(f"--n-cores expects comma-separated integers, "
+                     f"got {args.n_cores!r}")
+        if any(c < 1 for c in cores):
+            ap.error(f"--n-cores entries must be >= 1, got {args.n_cores!r}")
+
+    if args.json:
+        doc = sweep_json(cores, blocks_per_core=args.blocks_per_core)
+        if args.json == "-":
+            json.dump(doc, sys.stdout, indent=1)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(f"wrote {args.json}: {len(doc['rows'])} rows")
+        return
+
+    print("cluster.kernel,n_cores,point,speedup,ipc,power_mw,"
+          "energy_saving,energy_pj_per_elem")
+    for r in sweep_rows(cores, blocks_per_core=args.blocks_per_core):
+        print(f"cluster.{r['kernel']},{r['n_cores']},{r['point']},"
+              f"{r['speedup']},{r['ipc']:.4f},{r['power_mw']:.2f},"
+              f"{r['energy_saving']},{r['energy_pj_per_elem']:.2f}")
+    for agg in aggregate_rows(cores, blocks_per_core=args.blocks_per_core):
+        print(f"cluster.aggregate,{agg['n_cores']},{agg['point']},"
+              f"geomean_speedup={agg['geomean_speedup']},"
+              f"geomean_energy_saving={agg['geomean_energy_saving']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ Prints ``name,value,derived`` CSV lines:
   * fig2.*         — IPC / power / speedup / energy, baseline vs COPIFT
   * fig3.*         — poly_lcg IPC over problem × block sizes
   * kernels.*      — wall-time µs/call of the jit'd kernels on this host
+  * cluster.*      — multi-PE scaling sweep (cores × DVFS) from the
+                     repro.cluster subsystem
   * roofline.*     — TPU v5e roofline terms from the dry-run artifacts
                      (skipped with a notice until launch/dryrun.py has run)
 """
@@ -16,12 +18,13 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import fig2, fig3, kernels_bench, table1
+    from benchmarks import cluster_sweep, fig2, fig3, kernels_bench, table1
     sections = [
         ("table1", table1.run),
         ("fig2", fig2.run),
         ("fig3", fig3.run),
         ("kernels", kernels_bench.run),
+        ("cluster", cluster_sweep.run),
     ]
     try:
         from benchmarks import roofline

@@ -1,0 +1,71 @@
+"""Cluster-scale COPIFT walkthrough: from one calibrated PE to a full
+Snitch cluster with TCDM contention, DMA overlap, load balancing and DVFS.
+
+Run:  PYTHONPATH=src python examples/cluster_demo.py
+"""
+
+from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, cluster_roofline,
+                           evaluate_cluster, headline, optimal_point,
+                           scaling_efficiency, strong_scaling, weak_scaling)
+from repro.core.analytics import PAPER_HEADLINE
+from repro.core.kernels_isa import KERNELS
+
+
+def main():
+    print("— single-core reduction (the paper's numbers are the ground truth) —")
+    cfg1 = SNITCH_CLUSTER.with_cores(1)
+    res1 = [evaluate_cluster(k, cfg1, 1) for k in KERNELS]
+    agg1 = headline(res1)
+    print(f"1-core geomean speedup      {agg1['geomean_speedup']:.3f}  "
+          f"(paper: {PAPER_HEADLINE['geomean_speedup']})")
+    print(f"1-core geomean energy save  {agg1['geomean_energy_saving']:.3f}  "
+          f"(paper: {PAPER_HEADLINE['geomean_energy_saving']})")
+
+    print("\n— weak scaling on the 8-core Snitch cluster (work ∝ cores) —")
+    print(f"{'kernel':18s} {'speedup':>8s} {'IPC':>7s} {'power':>8s} "
+          f"{'E/elem':>9s} {'stall/acc':>9s}")
+    res8 = [evaluate_cluster(k, SNITCH_CLUSTER, 8) for k in KERNELS]
+    for r in res8:
+        print(f"{r.name:18s} {r.speedup:8.3f} {r.ipc_copift:7.2f} "
+              f"{r.power_copift_mw:6.1f}mW {r.energy_pj_per_elem:7.1f}pJ "
+              f"{r.extra_contention:9.3f}")
+    agg8 = headline(res8)
+    print(f"8-core geomean speedup {agg8['geomean_speedup']:.3f} "
+          f"(contention costs "
+          f"{agg1['geomean_speedup'] - agg8['geomean_speedup']:.3f} vs 1 core)")
+
+    print("\n— strong scaling, 36 blocks of poly_lcg (imbalance tail) —")
+    ss = strong_scaling("poly_lcg", total_blocks=36)
+    for r, eff in zip(ss, scaling_efficiency(ss)):
+        print(f"{r.n_cores:3d} cores: {r.cycles_copift:9d} cycles  "
+              f"efficiency {eff:.2f}  imbalance {r.imbalance:.2f}")
+
+    print("\n— weak scaling to 16 cores, expf (TCDM + shared DMA pressure) —")
+    ws = weak_scaling("expf", cores=(1, 2, 4, 8, 16))
+    for r, eff in zip(ws, scaling_efficiency(ws)):
+        print(f"{r.n_cores:3d} cores: efficiency {eff:.3f}  "
+              f"DMA util {r.dma_utilization:.2f}")
+
+    print("\n— cluster roofline (8 cores, nominal point) —")
+    for p in cluster_roofline():
+        oi = "  inf" if p.oi_flops_per_byte == float("inf") \
+            else f"{p.oi_flops_per_byte:5.1f}"
+        print(f"{p.name:18s} OI={oi} flop/B  attainable "
+              f"{p.attainable_gflops:5.1f}  achieved "
+              f"{p.achieved_gflops:5.2f} GFLOP/s  [{p.bound}-bound]")
+
+    print("\n— DVFS: energy-optimal point for 8-core expf, 250 mW cap —")
+    r8 = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+    best, sweep = optimal_point(SNITCH_CLUSTER, "expf", 8,
+                                r8.cycles_per_elem, power_cap_mw=250.0)
+    for s in sweep:
+        mark = " <- optimal" if s.point == best.point else \
+            ("" if s.feasible else "  (over cap)")
+        print(f"{s.point.name}: {s.cluster_power_mw:6.1f} mW  "
+              f"{s.energy_pj_per_elem:7.1f} pJ/elem{mark}")
+    print(f"nominal was {NOMINAL_POINT.name}; the cap moves the cluster to "
+          f"{best.point.name}")
+
+
+if __name__ == "__main__":
+    main()

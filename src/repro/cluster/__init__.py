@@ -1,0 +1,51 @@
+"""Cluster-scale COPIFT — the paper's single-PE models composed into a
+multi-core Snitch cluster (shared banked TCDM, one DMA engine, DVFS).
+
+Layer map (mirrors ``repro.core``'s):
+
+* ``topology``    — ``ClusterConfig`` / ``OperatingPoint``: cores, TCDM
+  banks, DMA width, the DVFS ladder (Snitch cluster defaults)
+* ``contention``  — inter-core TCDM bank-conflict surcharge, fed through
+  ``core.timing``'s ``extra_contention`` hook
+* ``dma``         — double-buffered cluster L1 refill overlapped against
+  compute (``max(compute, transfer)``, never the sum)
+* ``scheduler``   — static block-cyclic work partitioning + imbalance
+* ``dvfs``        — operating-point power scaling (dyn ∝ f·V², leak ∝ V²)
+  and the energy-optimal-point search under a cluster power cap
+* ``analytics``   — ``evaluate_cluster`` composition, strong/weak scaling
+  curves, cluster roofline, fig2-style aggregates
+
+Invariant (pinned in ``tests/test_cluster.py``): at one core, nominal DVFS
+and zero contention the cluster results equal the single-PE
+``core.timing.evaluate_kernel`` / ``core.energy`` numbers bit-for-bit.
+"""
+
+from repro.cluster.analytics import (ClusterKernelResult, RooflinePoint,
+                                     cluster_roofline, evaluate_cluster,
+                                     headline, scaling_efficiency,
+                                     strong_scaling, weak_scaling)
+from repro.cluster.contention import (AccessProfile, baseline_profile,
+                                      baseline_extra_contention,
+                                      copift_extra_contention, copift_profile)
+from repro.cluster.dma import (BYTES_PER_ELEM, DmaTiming, cluster_dma_timing,
+                               kernel_bytes, transfer_cycles)
+from repro.cluster.dvfs import (DvfsPointResult, cluster_power_mw,
+                                core_power_mw, optimal_point, scale_breakdown,
+                                sweep_points)
+from repro.cluster.scheduler import (WorkAssignment, block_cyclic,
+                                     cluster_compute_cycles)
+from repro.cluster.topology import (NOMINAL_POINT, OPERATING_POINTS,
+                                    SNITCH_CLUSTER, ClusterConfig,
+                                    OperatingPoint)
+
+__all__ = [
+    "ClusterKernelResult", "RooflinePoint", "cluster_roofline",
+    "evaluate_cluster", "headline", "scaling_efficiency", "strong_scaling",
+    "weak_scaling", "AccessProfile", "baseline_profile",
+    "baseline_extra_contention", "copift_extra_contention", "copift_profile",
+    "BYTES_PER_ELEM", "DmaTiming", "cluster_dma_timing", "kernel_bytes",
+    "transfer_cycles", "DvfsPointResult", "cluster_power_mw", "core_power_mw",
+    "optimal_point", "scale_breakdown", "sweep_points", "WorkAssignment",
+    "block_cyclic", "cluster_compute_cycles", "NOMINAL_POINT",
+    "OPERATING_POINTS", "SNITCH_CLUSTER", "ClusterConfig", "OperatingPoint",
+]

@@ -1,0 +1,263 @@
+"""Cluster-level evaluation: per-PE COPIFT × contention × DMA × DVFS.
+
+The composition contract (pinned by ``tests/test_cluster.py``): at
+``n_cores=1``, the nominal operating point and therefore zero inter-core
+contention, every number here reduces *bit-for-bit* to the single-PE
+machinery (``core.timing.evaluate_kernel`` / ``core.energy``) — the
+paper-calibrated reproduction stays the ground truth and the cluster model
+is a strict extension, charging only real cluster effects on top:
+
+* inter-core TCDM bank conflicts    (``cluster.contention``)
+* shared-DMA refill bandwidth       (``cluster.dma``; double-buffered, so
+                                     ``max(compute, transfer)``)
+* block-cyclic load imbalance       (``cluster.scheduler``)
+* operating-point power scaling     (``cluster.dvfs``)
+
+Like ``evaluate_kernel``, this is a steady-state model: fill/drain and the
+end-of-kernel barrier are excluded (they vanish against any production
+problem size, cf. Fig. 3's convergence).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+from repro.cluster import contention as _contention
+from repro.cluster import dma as _dma
+from repro.cluster import dvfs as _dvfs
+from repro.cluster.scheduler import block_cyclic, cluster_compute_cycles
+from repro.cluster.topology import (NOMINAL_POINT, ClusterConfig,
+                                    OperatingPoint, SNITCH_CLUSTER)
+from repro.core.analytics import TABLE_I, geomean
+from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
+from repro.core.timing import baseline_timing, copift_block_timing
+
+
+@lru_cache(maxsize=None)
+def _copift_timing(name: str, block: int, extra_contention: float):
+    """Memoized discrete-event run — the simulator dominates sweep time and
+    (kernel, block, contention) triples repeat across points/core counts."""
+    return copift_block_timing(copift_schedule(name), block,
+                               extra_contention=extra_contention)
+
+
+@lru_cache(maxsize=None)
+def _baseline_timing(name: str, block: int, extra_contention: float):
+    return baseline_timing(baseline_trace(name), block,
+                           extra_contention=extra_contention)
+
+
+@dataclass(frozen=True)
+class ClusterKernelResult:
+    """One (kernel × core count × operating point) evaluation."""
+    name: str
+    n_cores: int
+    point: OperatingPoint
+    block: int
+    total_blocks: int
+    total_elems: int
+    # cluster cycle counts (frequency-independent)
+    cycles_base: int
+    cycles_copift: int
+    instrs_base: int
+    instrs_copift: int
+    # model diagnostics
+    extra_contention: float       # stalls/access charged by the bank model
+    imbalance: float              # max/mean core load
+    dma_bound: bool
+    dma_utilization: float
+    # power at the operating point (mW, whole cluster)
+    power_base_mw: float
+    power_copift_mw: float
+
+    @property
+    def speedup(self) -> float:
+        """COPIFT cluster vs RV32G cluster, same core count and point."""
+        return self.cycles_base / self.cycles_copift
+
+    @property
+    def ipc_base(self) -> float:
+        return self.instrs_base / self.cycles_base
+
+    @property
+    def ipc_copift(self) -> float:
+        """Cluster-aggregate IPC (can exceed n_cores on dual-issue PEs)."""
+        return self.instrs_copift / self.cycles_copift
+
+    @property
+    def power_ratio(self) -> float:
+        return self.power_copift_mw / self.power_base_mw
+
+    @property
+    def energy_saving(self) -> float:
+        """E_base / E_copift = speedup / power ratio (same point)."""
+        return self.speedup / self.power_ratio
+
+    @property
+    def time_us(self) -> float:
+        return self.cycles_copift / self.point.freq_ghz * 1e-3
+
+    @property
+    def cycles_per_elem(self) -> float:
+        return self.cycles_copift / self.total_elems
+
+    @property
+    def energy_pj_per_elem(self) -> float:
+        """Cluster COPIFT energy per element at the operating point."""
+        t_ns = self.cycles_per_elem / self.point.freq_ghz
+        return self.power_copift_mw * t_ns
+
+
+def evaluate_cluster(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
+                     n_cores: int | None = None,
+                     point: OperatingPoint = NOMINAL_POINT,
+                     blocks_per_core: int = 1,
+                     total_blocks: int | None = None) -> ClusterKernelResult:
+    """Evaluate one kernel on the cluster.
+
+    Weak scaling by default (``blocks_per_core`` blocks per core); pass
+    ``total_blocks`` for strong scaling (fixed work, block-cyclic split).
+    Every block is the kernel's Table-I max block, as in ``evaluate_kernel``.
+    """
+    n_cores = cfg.n_cores if n_cores is None else n_cores
+    row = TABLE_I[name]
+    block = row.max_block
+    if total_blocks is None:
+        total_blocks = blocks_per_core * n_cores
+    if total_blocks < 1:
+        raise ValueError(f"need at least one block of work, got "
+                         f"{total_blocks} (blocks_per_core={blocks_per_core})")
+    assignment = block_cyclic(total_blocks, n_cores)
+    # Contention sees steady-state occupancy (round 0: all loaded cores).
+    n_active = assignment.cores_active(0)
+    extra_c = _contention.copift_extra_contention(cfg, name, n_active)
+    extra_b = _contention.baseline_extra_contention(cfg, name, n_active)
+
+    ct = _copift_timing(name, block, extra_c)
+    bt = _baseline_timing(name, block, extra_b)
+
+    compute_c = cluster_compute_cycles(ct.cycles, assignment)
+    compute_b = cluster_compute_cycles(bt.cycles, assignment)
+    total_elems = block * total_blocks
+    dma_c = _dma.cluster_dma_timing(cfg, name, total_elems, compute_c)
+    dma_b = _dma.cluster_dma_timing(cfg, name, total_elems, compute_b)
+
+    return ClusterKernelResult(
+        name=name, n_cores=n_cores, point=point, block=block,
+        total_blocks=total_blocks, total_elems=total_elems,
+        cycles_base=dma_b.overlapped_cycles,
+        cycles_copift=dma_c.overlapped_cycles,
+        instrs_base=bt.instrs * total_blocks,
+        instrs_copift=ct.instrs * total_blocks,
+        extra_contention=extra_c,
+        imbalance=assignment.imbalance,
+        dma_bound=dma_c.dma_bound,
+        dma_utilization=dma_c.dma_utilization,
+        power_base_mw=_dvfs.cluster_power_mw(cfg, name, n_active, point,
+                                             copift=False),
+        power_copift_mw=_dvfs.cluster_power_mw(cfg, name, n_active, point,
+                                               copift=True))
+
+
+# ---------------------------------------------------------------------------
+# Scaling curves
+# ---------------------------------------------------------------------------
+
+def weak_scaling(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
+                 cores: tuple[int, ...] = (1, 2, 4, 8, 16),
+                 blocks_per_core: int = 1,
+                 point: OperatingPoint = NOMINAL_POINT
+                 ) -> list[ClusterKernelResult]:
+    """Work grows with the cluster (throughput scaling)."""
+    return [evaluate_cluster(name, cfg.with_cores(n), n, point,
+                             blocks_per_core=blocks_per_core)
+            for n in cores]
+
+
+def strong_scaling(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
+                   cores: tuple[int, ...] = (1, 2, 4, 8, 16),
+                   total_blocks: int = 48,
+                   point: OperatingPoint = NOMINAL_POINT
+                   ) -> list[ClusterKernelResult]:
+    """Fixed work split ever thinner (latency scaling + imbalance tail)."""
+    return [evaluate_cluster(name, cfg.with_cores(n), n, point,
+                             total_blocks=total_blocks)
+            for n in cores]
+
+
+def scaling_efficiency(results: list[ClusterKernelResult]) -> list[float]:
+    """Per-entry parallel efficiency vs the first (1-core) entry.
+
+    Weak scaling: time(1)/time(n) with work ∝ n → ideal 1.0.
+    Strong scaling: handled by the same throughput form — efficiency is
+    (elems/cycle at n) / (n × elems/cycle at 1).
+    """
+    base = results[0]
+    base_tput = base.total_elems / base.cycles_copift
+    out = []
+    for r in results:
+        tput = r.total_elems / r.cycles_copift
+        scale = r.n_cores / base.n_cores
+        out.append(tput / (base_tput * scale))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cluster roofline (extends benchmarks/roofline.py to the Snitch cluster)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RooflinePoint:
+    """One kernel against the cluster's compute/DMA rooflines."""
+    name: str
+    oi_flops_per_byte: float      # inf for the in-core Monte-Carlo kernels
+    peak_gflops: float            # n_cores × FMA × freq
+    attainable_gflops: float      # min(peak, OI × DMA bandwidth)
+    achieved_gflops: float
+    bound: str                    # "compute" | "memory"
+
+
+def cluster_roofline(cfg: ClusterConfig = SNITCH_CLUSTER,
+                     point: OperatingPoint = NOMINAL_POINT,
+                     blocks_per_core: int = 1) -> list[RooflinePoint]:
+    """FP64 roofline of the cluster: compute roof = n_cores FMA lanes, memory
+    roof = the shared DMA engine.  FLOPs are counted as FP instructions per
+    element (FMA=1 issue slot — consistent with the IPC accounting)."""
+    peak = cfg.n_cores * 2.0 * point.freq_ghz          # GFLOP/s, FMA = 2
+    bw_gbs = cfg.dma_bytes_per_cycle * point.freq_ghz  # GB/s
+    out = []
+    for name in KERNELS:
+        sched = copift_schedule(name)
+        flops_per_elem = 2.0 * sched.n_fp              # count FMAs generously
+        bytes_per_elem = _dma.BYTES_PER_ELEM[name]
+        oi = (flops_per_elem / bytes_per_elem if bytes_per_elem
+              else float("inf"))
+        attainable = min(peak, oi * bw_gbs) if bytes_per_elem else peak
+        r = evaluate_cluster(name, cfg, cfg.n_cores, point,
+                             blocks_per_core=blocks_per_core)
+        achieved = (flops_per_elem * r.total_elems
+                    / (r.cycles_copift / point.freq_ghz))  # GFLOP/s
+        out.append(RooflinePoint(
+            name=name, oi_flops_per_byte=oi, peak_gflops=peak,
+            attainable_gflops=attainable, achieved_gflops=achieved,
+            bound="memory" if attainable < peak else "compute"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Aggregates
+# ---------------------------------------------------------------------------
+
+def headline(results: list[ClusterKernelResult]) -> dict:
+    """fig2-style aggregates over a set of per-kernel cluster results."""
+    return dict(
+        geomean_speedup=geomean([r.speedup for r in results]),
+        peak_speedup=max(r.speedup for r in results),
+        peak_ipc=max(r.ipc_copift for r in results),
+        geomean_ipc_gain=geomean([r.ipc_copift / r.ipc_base
+                                  for r in results]),
+        geomean_power_ratio=geomean([r.power_ratio for r in results]),
+        max_power_ratio=max(r.power_ratio for r in results),
+        geomean_energy_saving=geomean([r.energy_saving for r in results]),
+        peak_energy_saving=max(r.energy_saving for r in results))

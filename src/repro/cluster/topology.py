@@ -1,0 +1,88 @@
+"""Cluster topology — the shared-memory context the paper's PEs live in.
+
+The paper evaluates COPIFT on one Snitch PE, but states its target as
+accelerators that "integrate an ever-increasing number of extremely area-
+and energy-efficient PEs".  Snitch-class cores ship as *clusters*: N cores
+sharing a word-interleaved multi-banked TCDM through a single-cycle
+interconnect, fed by one cluster DMA engine (Zaruba et al., arXiv:2002.10143
+— 8 cores, 32 banks, 512-bit DMA).  This module is the static description of
+that context; the sibling modules derive contention, transfer, scheduling
+and DVFS behavior from it.
+
+Operating points follow the lumos-style (freq, vdd) pair convention: each
+point names a frequency/voltage pair, and power scales from the nominal
+calibration point (1 GHz / 0.8 V — the condition ``core/energy.py``'s
+coefficients are calibrated at) as dynamic ∝ f·V² and static ∝ V².
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    """One DVFS (frequency, voltage) pair."""
+    name: str
+    freq_ghz: float
+    vdd: float
+
+    def dynamic_scale(self, nominal: "OperatingPoint") -> float:
+        """Dynamic power multiplier vs the nominal point: P_dyn ∝ f·V²."""
+        return (self.freq_ghz / nominal.freq_ghz) * (self.vdd / nominal.vdd) ** 2
+
+    def static_scale(self, nominal: "OperatingPoint") -> float:
+        """Leakage multiplier vs nominal: ∝ V² (first-order, fixed temp)."""
+        return (self.vdd / nominal.vdd) ** 2
+
+
+#: The calibration point of ``core/energy.py`` (GF12LP+, 1 GHz, 0.8 V).
+NOMINAL_POINT = OperatingPoint("1.00GHz@0.80V", 1.00, 0.80)
+
+#: Snitch-cluster DVFS ladder (GF12LP+ style signoff corners around the
+#: calibration point; low-voltage points trade frequency for energy).
+OPERATING_POINTS: tuple[OperatingPoint, ...] = (
+    OperatingPoint("0.50GHz@0.60V", 0.50, 0.60),
+    OperatingPoint("0.75GHz@0.70V", 0.75, 0.70),
+    NOMINAL_POINT,
+    OperatingPoint("1.25GHz@0.90V", 1.25, 0.90),
+    OperatingPoint("1.45GHz@1.00V", 1.45, 1.00),
+)
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Static cluster parameters (defaults: the published Snitch cluster).
+
+    ``tcdm_banks``            word-interleaved SRAM banks behind the
+                              single-cycle crossbar (conflicts serialize);
+    ``dma_bytes_per_cycle``   cluster DMA engine width (512-bit = 64 B);
+    ``operating_points``      the DVFS ladder available to ``dvfs.py``;
+    ``power_cap_mw``          cluster-level power budget for the
+                              energy-optimal-point search (None = uncapped).
+    """
+    n_cores: int = 8
+    tcdm_banks: int = 32
+    dma_bytes_per_cycle: float = 64.0
+    operating_points: tuple[OperatingPoint, ...] = OPERATING_POINTS
+    nominal: OperatingPoint = NOMINAL_POINT
+    power_cap_mw: float | None = None
+
+    def __post_init__(self):
+        if self.n_cores < 1:
+            raise ValueError(f"n_cores must be >= 1, got {self.n_cores}")
+        if self.tcdm_banks < 1:
+            raise ValueError(f"tcdm_banks must be >= 1, got {self.tcdm_banks}")
+        if self.dma_bytes_per_cycle <= 0:
+            raise ValueError("dma_bytes_per_cycle must be positive")
+        if self.nominal not in self.operating_points:
+            raise ValueError("nominal operating point must be in the ladder")
+
+    def with_cores(self, n_cores: int) -> "ClusterConfig":
+        """Same cluster, different core count (banks/DMA held fixed — the
+        resource-sharing effect the scaling sweeps measure)."""
+        return replace(self, n_cores=n_cores)
+
+
+#: The reference 8-core Snitch cluster.
+SNITCH_CLUSTER = ClusterConfig()

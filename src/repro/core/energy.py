@@ -22,6 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.analytics import TABLE_I
+from repro.core.isa import count_mem_accesses as _mem_accesses
 from repro.core.kernels_isa import baseline_trace, copift_schedule
 from repro.core.timing import (CopiftSchedule, KernelResult,
                                copift_block_timing, evaluate_kernel)
@@ -56,11 +57,6 @@ class PowerBreakdown:
     def total(self) -> float:
         return (self.const + self.int_dp + self.fpu + self.lsu + self.fetch
                 + self.dma + self.ssr)
-
-
-def _mem_accesses(instrs) -> int:
-    return sum(1 for i in instrs
-               if i.opcode in ("lw", "sw", "flw", "fsw", "fld", "fsd"))
 
 
 def baseline_power(name: str) -> PowerBreakdown:

@@ -170,6 +170,13 @@ def latency(opcode: str) -> int:
     raise KeyError(f"unknown opcode: {opcode}")
 
 
+def count_mem_accesses(instrs) -> int:
+    """TCDM accesses (loads + stores) in an instruction sequence — the one
+    counter shared by the energy model's LSU utilization and the cluster
+    contention model's request rate, so they can never diverge."""
+    return sum(1 for i in instrs if i.opcode in MEM_OPS)
+
+
 def is_copift_ext(opcode: str) -> bool:
     return opcode in COPIFT_EXT_OPS
 

@@ -111,7 +111,8 @@ def _list_schedule(instrs: list[Instr]) -> list[Instr]:
     return order
 
 
-def _simulate_inorder(instrs: list[Instr], tcdm_contention: float = 0.0) -> int:
+def _simulate_inorder(instrs: list[Instr],
+                      tcdm_contention: float = 0.0) -> float:
     """In-order single-issue execution of a statically scheduled stream:
     RAW stalls from result latencies + the single integer-RF write port
     (multi-cycle producers — mul, and cross-RF FP ops targeting the int RF —
@@ -119,7 +120,10 @@ def _simulate_inorder(instrs: list[Instr], tcdm_contention: float = 0.0) -> int:
 
     ``tcdm_contention`` adds fractional stall cycles per memory access,
     modeling SSR-stream/LSU bank conflicts on the shared TCDM when data
-    movers are active."""
+    movers are active.  Returns a *float* so callers that window the
+    simulation (``thread_cycles``) can accumulate fractional stalls across
+    windows before truncating once — per-window truncation would floor
+    small surcharges (e.g. the cluster's inter-core contention) to zero."""
     ready: dict[str, int] = {}
     wb_busy: set[int] = set()
     t = 0
@@ -129,8 +133,7 @@ def _simulate_inorder(instrs: list[Instr], tcdm_contention: float = 0.0) -> int:
         for s in ins.srcs:
             if s in ready and ready[s] > t:
                 t = ready[s]
-        if ins.domain is Domain.MEM or ins.opcode in ("lw", "sw", "fld", "fsd",
-                                                      "flw", "fsw"):
+        if ins.domain is Domain.MEM:
             mem_accesses += 1
         if ins.dst is not None:
             wb = t + ins.lat - 1
@@ -144,36 +147,45 @@ def _simulate_inorder(instrs: list[Instr], tcdm_contention: float = 0.0) -> int:
                     t += 1
                     wb = t + ins.lat - 1
             ready[ins.dst] = wb + 1
-    return t + int(mem_accesses * tcdm_contention)
+    return t + mem_accesses * tcdm_contention
 
 
-def simulate_single_issue(instrs: list[Instr], iters: int = 1,
-                          schedule: bool = True,
-                          tcdm_contention: float = 0.0) -> int:
-    """Cycles for ``iters`` repetitions of ``instrs`` on the in-order core:
-    SSA-unroll → list-schedule (unless ``schedule=False``) → simulate."""
+def _simulate_stream(instrs: list[Instr], iters: int, schedule: bool = True,
+                     tcdm_contention: float = 0.0) -> float:
+    """SSA-unroll → list-schedule (unless ``schedule=False``) → simulate;
+    float result (fractional contention stalls not yet truncated)."""
     stream = _ssa_unroll(instrs, iters)
     if schedule:
         stream = _list_schedule(stream)
     return _simulate_inorder(stream, tcdm_contention)
 
 
+def simulate_single_issue(instrs: list[Instr], iters: int = 1,
+                          schedule: bool = True,
+                          tcdm_contention: float = 0.0) -> int:
+    """Cycles for ``iters`` repetitions of ``instrs`` on the in-order core."""
+    return int(_simulate_stream(instrs, iters, schedule, tcdm_contention))
+
+
 def thread_cycles(instrs: list[Instr], iters: int = 1,
                   tcdm_contention: float = 0.0) -> int:
     """Cycles for one thread of a dual-issue pair (same issue rules).
     Unrolling/scheduling is windowed (groups of 8 iterations) to bound the
-    scheduler's scope to a realistic FREP/loop-buffer horizon."""
+    scheduler's scope to a realistic FREP/loop-buffer horizon.  Fractional
+    contention stalls accumulate across windows and truncate once at the
+    end, so small per-access surcharges survive into the total."""
     if iters <= 0:
         return 0
     WINDOW = 8
     full, rem = divmod(iters, WINDOW)
-    cycles = 0
+    cycles = 0.0
     if full:
-        per = simulate_single_issue(instrs, WINDOW, tcdm_contention=tcdm_contention)
-        cycles += per * full
+        cycles += _simulate_stream(instrs, WINDOW,
+                                   tcdm_contention=tcdm_contention) * full
     if rem:
-        cycles += simulate_single_issue(instrs, rem, tcdm_contention=tcdm_contention)
-    return cycles
+        cycles += _simulate_stream(instrs, rem,
+                                   tcdm_contention=tcdm_contention)
+    return int(cycles)
 
 
 # ---------------------------------------------------------------------------
@@ -238,15 +250,23 @@ class BlockTiming:
         return self.instrs / self.cycles
 
 
-def copift_block_timing(sched: CopiftSchedule, block: int) -> BlockTiming:
-    """Steady-state cycles for one block iteration (paper Fig. 2a regime)."""
+def copift_block_timing(sched: CopiftSchedule, block: int,
+                        extra_contention: float = 0.0) -> BlockTiming:
+    """Steady-state cycles for one block iteration (paper Fig. 2a regime).
+
+    ``extra_contention`` adds stall cycles per memory access on top of the
+    calibrated intra-core SSR/LSU conflict rate — the hook the cluster model
+    (``repro.cluster.contention``) uses to charge inter-core TCDM bank
+    conflicts.  The default of 0 keeps the paper-calibrated single-PE
+    numbers bit-for-bit.
+    """
     oh = sched.block_overhead_instrs()
     fp_first = sum(len(b) for b in sched.fp_bodies)      # FREP 1st iteration
     # Integer thread: its own body for the whole block + bookkeeping + the
     # first FREP iteration of each FP phase (issued through the int core).
     # SSR data movers are active during the block → TCDM bank contention on
     # the integer thread's own loads/stores.
-    contention = 0.25 if sched.n_ssrs else 0.0
+    contention = (0.25 if sched.n_ssrs else 0.0) + extra_contention
     int_cycles = thread_cycles(sched.int_body, block,
                                tcdm_contention=contention) + oh + fp_first
     # FP thread: remaining block-1 iterations stream from the FREP buffer.
@@ -257,8 +277,10 @@ def copift_block_timing(sched: CopiftSchedule, block: int) -> BlockTiming:
                        fp_cycles=fp_cycles, instrs=instrs)
 
 
-def baseline_timing(trace: KernelTrace, n: int = 1) -> BlockTiming:
-    cycles = simulate_single_issue(trace.instrs, n)
+def baseline_timing(trace: KernelTrace, n: int = 1,
+                    extra_contention: float = 0.0) -> BlockTiming:
+    cycles = simulate_single_issue(trace.instrs, n,
+                                   tcdm_contention=extra_contention)
     instrs = len(trace.instrs) * n
     return BlockTiming(cycles=cycles, int_cycles=cycles, fp_cycles=0,
                        instrs=instrs)
@@ -270,7 +292,8 @@ PROGRAM_PROLOGUE_CYCLES = 120
 
 
 def copift_problem_timing(sched: CopiftSchedule, problem: int,
-                          block: int) -> BlockTiming:
+                          block: int,
+                          extra_contention: float = 0.0) -> BlockTiming:
     """Full-problem cycles with software-pipeline fill/drain (Fig. 3).
 
     Pipeline iteration j' runs phase p on block j'-p (when in range); its
@@ -283,7 +306,7 @@ def copift_problem_timing(sched: CopiftSchedule, problem: int,
     d = sched.pipeline_depth
     oh = sched.block_overhead_instrs()
     fp_first = sum(len(b) for b in sched.fp_bodies)
-    contention = 0.25 if sched.n_ssrs else 0.0
+    contention = (0.25 if sched.n_ssrs else 0.0) + extra_contention
     int_blk = thread_cycles(sched.int_body, block, tcdm_contention=contention)
     fp_blk = [thread_cycles(b, max(0, block - 1)) + len(b)
               for b in sched.fp_bodies]

@@ -35,7 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import SHAPES, applicable_shapes, load_config
 from repro.configs.registry import ARCHS
 from repro.launch import specs as SP
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models.model import forward
 from repro.parallel.autoshard import activation_sharding
 from repro.parallel.sharding import ShardingRules
@@ -125,7 +125,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
                   n_active_params=cfg.n_active_params())
     t0 = time.time()
     fn, args, in_sh = _step_and_specs(cfg, shape, rules, mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
         record["lower_s"] = round(time.time() - t0, 1)
         t1 = time.time()

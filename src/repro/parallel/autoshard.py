@@ -105,6 +105,21 @@ def logits(x):
     return x
 
 
+@jax.custom_jvp
+def _diffable_barrier(x):
+    # Older JAX releases ship no differentiation rule for
+    # optimization_barrier; the barrier is an XLA scheduling hint, so the
+    # identity JVP below is exact and keeps remat'd training steps
+    # differentiable on every supported version.
+    return jax.lax.optimization_barrier(x)
+
+
+@_diffable_barrier.defjvp
+def _diffable_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _diffable_barrier(x), t
+
+
 def barrier(x):
     """Optimization barrier under an active mesh context: pins the bf16
     downcast on the producer side of SPMD-inserted collectives (XLA's CPU
@@ -112,7 +127,7 @@ def barrier(x):
     TP partial-sum reduction into fp32 — 2× the ICI traffic).  §Perf it.2."""
     if current() is None:
         return x
-    return jax.lax.optimization_barrier(x)
+    return _diffable_barrier(x)
 
 
 def tokens_nd(x):

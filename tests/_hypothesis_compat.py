@@ -1,0 +1,32 @@
+"""Optional-``hypothesis`` shim for the property-based test modules.
+
+``hypothesis`` is a test-only extra; on a bare install the suite must still
+collect and run its example-based tests.  Importing ``given``/``settings``/
+``st`` from here gives the real objects when hypothesis is available and
+otherwise substitutes decorators that mark each property test as skipped
+(with a reason) while leaving the rest of the module untouched.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # bare install: skip property tests, keep the module
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Any ``st.<name>(...)`` call resolves to an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _Strategies()

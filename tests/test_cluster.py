@@ -1,0 +1,253 @@
+"""Cluster subsystem invariants: single-core reduction (bit-for-bit),
+monotone contention, DMA overlap bounds, load balancing, and the DVFS
+energy-optimal point."""
+
+import math
+
+import pytest
+
+from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, ClusterConfig,
+                           block_cyclic, cluster_dma_timing, cluster_roofline,
+                           copift_extra_contention, evaluate_cluster,
+                           headline, optimal_point, scale_breakdown,
+                           scaling_efficiency, strong_scaling, sweep_points,
+                           weak_scaling)
+from repro.cluster.dma import DmaTiming
+from repro.core.analytics import TABLE_I, geomean
+from repro.core.energy import copift_power, evaluate_energy
+from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
+from repro.core.timing import evaluate_kernel
+
+
+@pytest.fixture(scope="module")
+def single_pe():
+    return {k: evaluate_kernel(k, baseline_trace(k), copift_schedule(k),
+                               TABLE_I[k].max_block) for k in KERNELS}
+
+
+@pytest.fixture(scope="module")
+def cluster_1core():
+    cfg = SNITCH_CLUSTER.with_cores(1)
+    return {k: evaluate_cluster(k, cfg, 1) for k in KERNELS}
+
+
+class TestSingleCoreReduction:
+    """THE contract: at n_cores=1, nominal DVFS, zero contention, the
+    cluster model must reproduce the paper-calibrated single-PE numbers
+    bit-for-bit — not approximately."""
+
+    def test_speedup_exact(self, single_pe, cluster_1core):
+        for k in KERNELS:
+            assert cluster_1core[k].speedup == single_pe[k].speedup
+
+    def test_ipc_exact(self, single_pe, cluster_1core):
+        for k in KERNELS:
+            assert cluster_1core[k].ipc_copift == single_pe[k].ipc_copift
+            assert cluster_1core[k].ipc_base == single_pe[k].ipc_base
+
+    def test_cycles_exact(self, single_pe, cluster_1core):
+        for k in KERNELS:
+            assert cluster_1core[k].cycles_copift == single_pe[k].cycles_copift
+            assert cluster_1core[k].cycles_base == single_pe[k].cycles_base
+
+    def test_energy_exact(self, cluster_1core):
+        for k in KERNELS:
+            en = evaluate_energy(k)
+            assert cluster_1core[k].energy_saving == en.energy_saving
+            assert cluster_1core[k].power_ratio == en.power_ratio
+
+    def test_headline_geomeans_exact(self, single_pe, cluster_1core):
+        agg = headline(list(cluster_1core.values()))
+        assert agg["geomean_speedup"] == geomean(
+            [r.speedup for r in single_pe.values()])
+        assert agg["geomean_energy_saving"] == geomean(
+            [evaluate_energy(k).energy_saving for k in KERNELS])
+
+    def test_zero_extra_contention_alone(self, cluster_1core):
+        for k in KERNELS:
+            assert cluster_1core[k].extra_contention == 0.0
+
+
+class TestContention:
+    CORES = (1, 2, 4, 8, 16, 32)
+
+    @pytest.mark.parametrize("name", KERNELS)
+    def test_extra_stalls_monotone_in_cores(self, name):
+        vals = [copift_extra_contention(SNITCH_CLUSTER.with_cores(n), name, n)
+                for n in self.CORES]
+        assert vals[0] == 0.0
+        assert all(b >= a for a, b in zip(vals, vals[1:]))
+        assert vals[-1] > 0.0
+
+    @pytest.mark.parametrize("name", ("expf", "poly_lcg"))
+    def test_fixed_total_work_core_cycles_monotone(self, name):
+        """Fixed total work: latency must not grow with cores, while the
+        aggregate core-cycles consumed (latency × cores — what contention
+        and imbalance waste) must be non-decreasing."""
+        results = strong_scaling(name, total_blocks=32,
+                                 cores=(1, 2, 4, 8, 16))
+        lat = [r.cycles_copift for r in results]
+        agg = [r.cycles_copift * r.n_cores for r in results]
+        assert all(b <= a for a, b in zip(lat, lat[1:]))
+        assert all(b >= a for a, b in zip(agg, agg[1:]))
+
+    def test_more_banks_less_contention(self):
+        few = ClusterConfig(tcdm_banks=8)
+        many = ClusterConfig(tcdm_banks=64)
+        for name in KERNELS:
+            assert copift_extra_contention(few, name, 8) \
+                > copift_extra_contention(many, name, 8)
+
+    def test_issr_kernel_contends_harder(self):
+        """logf's ISSR gathers behave like random traffic; expf's affine
+        streams sweep banks in order — same cluster, harsher pattern."""
+        from repro.cluster import copift_profile
+        assert copift_profile("logf").pattern > copift_profile("expf").pattern
+
+
+class TestDma:
+    def test_overlap_never_exceeds_serial(self):
+        for compute in (0, 10, 1000, 123456):
+            for transfer in (0, 9, 1000, 999999):
+                t = DmaTiming(compute, transfer)
+                assert t.overlapped_cycles <= t.serial_cycles
+                assert t.overlapped_cycles == max(compute, transfer)
+
+    def test_streaming_kernels_move_bytes_mc_do_not(self):
+        t_stream = cluster_dma_timing(SNITCH_CLUSTER, "expf", 10_000, 1)
+        t_mc = cluster_dma_timing(SNITCH_CLUSTER, "pi_lcg", 10_000, 1)
+        assert t_stream.transfer_cycles > 0
+        assert t_mc.transfer_cycles == 0
+
+    def test_nominal_bandwidth_hides_refill(self):
+        """At the Snitch DMA's 64 B/cycle, refill hides under compute for
+        every kernel at every swept core count (the double-buffering win)."""
+        for name in KERNELS:
+            for n in (1, 2, 4, 8, 16):
+                r = evaluate_cluster(name, SNITCH_CLUSTER.with_cores(n), n)
+                assert not r.dma_bound
+
+    def test_starved_bandwidth_binds_and_still_bounded(self):
+        """A crippled DMA (0.5 B/cycle) turns expf memory-bound; cluster
+        cycles equal the transfer term and never the compute+transfer sum."""
+        cfg = ClusterConfig(dma_bytes_per_cycle=0.5)
+        r = evaluate_cluster("expf", cfg, 8)
+        fast = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        assert r.dma_bound
+        assert r.cycles_copift > fast.cycles_copift
+        assert r.cycles_copift <= fast.cycles_copift \
+            + math.ceil(16.0 * r.total_elems / 0.5)
+
+
+class TestScheduler:
+    @pytest.mark.parametrize("n_blocks,n_cores", [(0, 4), (1, 8), (36, 16),
+                                                  (48, 8), (7, 3), (100, 7)])
+    def test_block_cyclic_conservation_and_balance(self, n_blocks, n_cores):
+        a = block_cyclic(n_blocks, n_cores)
+        assert sum(a.blocks_per_core) == n_blocks
+        assert max(a.blocks_per_core) - min(a.blocks_per_core) <= 1
+        assert a.imbalance >= 1.0 or n_blocks == 0
+
+    def test_even_split_is_balanced(self):
+        a = block_cyclic(48, 8)
+        assert a.imbalance == 1.0 and a.idle_core_cycles_frac == 0.0
+
+    def test_remainder_creates_tail(self):
+        a = block_cyclic(36, 16)
+        assert a.max_blocks == 3
+        assert a.imbalance == pytest.approx(3 / 2.25)
+
+    def test_weak_scaling_efficiency_near_one(self):
+        ws = weak_scaling("poly_lcg", cores=(1, 2, 4, 8))
+        for eff in scaling_efficiency(ws):
+            assert 0.9 <= eff <= 1.0 + 1e-12
+
+
+class TestDvfs:
+    def test_optimal_point_inside_ladder(self):
+        for name in KERNELS:
+            r = evaluate_cluster(name, SNITCH_CLUSTER, 8)
+            best, sweep = optimal_point(SNITCH_CLUSTER, name, 8,
+                                        r.cycles_per_elem)
+            assert best.point in SNITCH_CLUSTER.operating_points
+            assert len(sweep) == len(SNITCH_CLUSTER.operating_points)
+            vmin = min(p.vdd for p in SNITCH_CLUSTER.operating_points)
+            vmax = max(p.vdd for p in SNITCH_CLUSTER.operating_points)
+            assert vmin <= best.point.vdd <= vmax
+
+    def test_optimal_is_min_energy_among_feasible(self):
+        r = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        best, sweep = optimal_point(SNITCH_CLUSTER, "expf", 8,
+                                    r.cycles_per_elem, power_cap_mw=300.0)
+        feas = [s for s in sweep if s.feasible]
+        assert feas and best.feasible
+        assert best.energy_pj_per_elem == min(s.energy_pj_per_elem
+                                              for s in feas)
+
+    def test_power_cap_moves_the_optimum_down(self):
+        """A cluster power budget forces a lower-voltage point than the
+        uncapped optimum would need at high core counts."""
+        r = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        best_cap, _ = optimal_point(SNITCH_CLUSTER, "expf", 8,
+                                    r.cycles_per_elem, power_cap_mw=100.0)
+        assert best_cap.cluster_power_mw <= 100.0
+
+    def test_infeasible_cap_falls_back_to_lowest_power(self):
+        r = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        best, sweep = optimal_point(SNITCH_CLUSTER, "expf", 8,
+                                    r.cycles_per_elem, power_cap_mw=1.0)
+        assert best.cluster_power_mw == min(s.cluster_power_mw for s in sweep)
+
+    def test_nominal_scale_is_identity_object(self):
+        pb = copift_power("expf")
+        assert scale_breakdown(pb, NOMINAL_POINT) is pb
+
+    def test_custom_nominal_respected(self):
+        """Power scaling is relative to cfg.nominal, not the module
+        default: at a cluster's own calibration point the scale is 1."""
+        from repro.cluster import OperatingPoint, cluster_power_mw
+        custom = OperatingPoint("0.75GHz@0.70V", 0.75, 0.70)
+        cfg = ClusterConfig(nominal=custom)
+        assert cluster_power_mw(cfg, "expf", 1, custom) \
+            == copift_power("expf").total
+
+    def test_power_scales_up_with_frequency_and_voltage(self):
+        pts = sorted(SNITCH_CLUSTER.operating_points,
+                     key=lambda p: p.freq_ghz)
+        powers = [sweep_points(SNITCH_CLUSTER, "expf", 8, 100.0)[i]
+                  .cluster_power_mw
+                  for i, _ in enumerate(pts)]
+        assert all(b > a for a, b in zip(powers, powers[1:]))
+
+
+class TestRooflineAndSweep:
+    def test_roofline_terms(self):
+        pts = cluster_roofline()
+        by_name = {p.name: p for p in pts}
+        assert by_name["pi_lcg"].oi_flops_per_byte == float("inf")
+        for p in pts:
+            assert p.achieved_gflops <= p.attainable_gflops + 1e-9
+            assert p.attainable_gflops <= p.peak_gflops + 1e-9
+
+    def test_sweep_json_contract(self):
+        """The 8-core sweep carries speedup, IPC and energy per kernel per
+        DVFS point — the scaling-table contract of cluster_sweep --json."""
+        from benchmarks.cluster_sweep import sweep_json
+        doc = sweep_json(cores=(8,))
+        pts = {p["name"] for p in doc["cluster"]["operating_points"]}
+        rows = [r for r in doc["rows"] if r["n_cores"] == 8]
+        assert len(rows) == len(KERNELS) * len(pts)
+        for r in rows:
+            for key in ("speedup", "ipc", "energy_pj_per_elem",
+                        "energy_saving", "point"):
+                assert key in r
+
+    def test_cluster_sweep_one_core_matches_fig2(self, single_pe):
+        """Acceptance: --n-cores 1 reproduces the single-PE numbers."""
+        from benchmarks.cluster_sweep import sweep_rows
+        rows = sweep_rows(cores=(1,), points=(NOMINAL_POINT,))
+        for r in rows:
+            assert r["speedup"] == single_pe[r["kernel"]].speedup
+            assert r["ipc"] == single_pe[r["kernel"]].ipc_copift
+            assert r["energy_saving"] == \
+                evaluate_energy(r["kernel"]).energy_saving

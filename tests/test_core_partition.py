@@ -2,7 +2,7 @@
 
 import networkx as nx
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (DepType, Domain, build_dfg, partition, reorder)
 from repro.core.dfg import cross_edges

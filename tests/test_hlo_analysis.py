@@ -73,7 +73,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import collective_bytes
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh, mesh_context
+mesh = make_mesh((4,), ("d",))
 TRIPS = 7
 def fn(x):
     def body(c, _):
@@ -85,7 +86,7 @@ def fn(x):
         return y / jnp.float32(64.0), None
     out, _ = jax.lax.scan(body, x, None, length=TRIPS)
     return out
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     comp = jax.jit(fn).lower(
         jax.ShapeDtypeStruct((64, 64), jnp.float32,
                              sharding=NamedSharding(mesh, P("d", None)))
