@@ -87,6 +87,31 @@ def sweep_json(cores=DEFAULT_CORES, blocks_per_core: int = 1) -> dict:
         aggregates=aggregate_rows(cores, blocks_per_core=blocks_per_core))
 
 
+def tuned_rows(cores=(8,), power_cap_mw: float | None = None,
+               objective: str = "energy") -> list[dict]:
+    """Tuner-backed operating-point selection (``--tuned``): for each
+    built-in tunable workload, hold the plan knobs at the paper defaults
+    and let ``repro.tune`` pick the DVFS point under the power cap —
+    the model-guided replacement for reading the sweep by eye."""
+    from repro.tune import select_operating_point
+    from repro.tune.workloads import BUILTIN_KERNELS
+    rows = []
+    for n in cores:
+        for k in BUILTIN_KERNELS:
+            res = select_operating_point(k, SNITCH_CLUSTER, n,
+                                         power_cap_mw=power_cap_mw,
+                                         objective=objective)
+            rows.append(dict(
+                kernel=k, n_cores=n, point=res.best.point,
+                objective=objective, power_cap_mw=power_cap_mw,
+                power_mw=res.best_cost.power_mw,
+                energy_pj_per_elem=res.best_cost.energy_pj / res.problem,
+                time_ns_per_elem=res.best_cost.time_ns / res.problem,
+                saving_vs_nominal=res.predicted_energy_saving,
+                feasible=res.best_cost.feasible))
+    return rows
+
+
 def run() -> list[str]:
     """CSV section for ``benchmarks/run.py``: the core-count sweep at the
     nominal point, the full DVFS ladder at 8 cores, and the aggregates."""
@@ -125,6 +150,11 @@ def main(argv=None) -> None:
     ap.add_argument("--blocks-per-core", type=int, default=1)
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="write the full sweep as JSON ('-' for stdout)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="print repro.tune operating-point selections "
+                         "instead of the raw sweep")
+    ap.add_argument("--power-cap-mw", type=float, default=None,
+                    help="cluster power cap for --tuned (mW)")
     args = ap.parse_args(argv)
     if args.blocks_per_core < 1:
         ap.error(f"--blocks-per-core must be >= 1, got {args.blocks_per_core}")
@@ -137,6 +167,26 @@ def main(argv=None) -> None:
                      f"got {args.n_cores!r}")
         if any(c < 1 for c in cores):
             ap.error(f"--n-cores entries must be >= 1, got {args.n_cores!r}")
+
+    if args.tuned:
+        rows = tuned_rows(cores=cores, power_cap_mw=args.power_cap_mw)
+        if args.json:
+            doc = dict(power_cap_mw=args.power_cap_mw, rows=rows)
+            if args.json == "-":
+                json.dump(doc, sys.stdout, indent=1)
+                print()
+            else:
+                with open(args.json, "w") as f:
+                    json.dump(doc, f, indent=1)
+                print(f"wrote {args.json}: {len(rows)} rows")
+            return
+        print("cluster.tuned,n_cores,point,power_mw,energy_pj_per_elem,"
+              "saving_vs_nominal")
+        for r in rows:
+            print(f"cluster.tuned.{r['kernel']},{r['n_cores']},{r['point']},"
+                  f"{r['power_mw']:.1f},{r['energy_pj_per_elem']:.2f},"
+                  f"{r['saving_vs_nominal']:.3f}")
+        return
 
     if args.json:
         doc = sweep_json(cores, blocks_per_core=args.blocks_per_core)

@@ -7,40 +7,103 @@ Prints ``name,value,derived`` CSV lines:
   * kernels.*      — wall-time µs/call of the jit'd kernels on this host
   * cluster.*      — multi-PE scaling sweep (cores × DVFS) from the
                      repro.cluster subsystem
+  * tune.*         — tuned-vs-default COPIFT plans (repro.tune) per
+                     built-in kernel, plus tuner-picked operating points
   * roofline.*     — TPU v5e roofline terms from the dry-run artifacts
                      (skipped with a notice until launch/dryrun.py has run)
+
+``--json PATH`` additionally writes a machine-readable ``BENCH_*.json``
+snapshot: every section's CSV lines plus structured metrics where the
+section provides them (``fig2`` rows/aggregates, the full ``tune`` report
+with tuned-vs-default speedup per kernel) — the input for perf-trajectory
+tracking across commits.  ``--sections`` restricts the run (e.g. the CI
+smoke runs ``table1,fig2,tune``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
-def main() -> None:
-    from benchmarks import cluster_sweep, fig2, fig3, kernels_bench, table1
+def _sections() -> list[tuple[str, object]]:
+    from benchmarks import (cluster_sweep, fig2, fig3, kernels_bench, table1,
+                            tune_bench)
     sections = [
         ("table1", table1.run),
         ("fig2", fig2.run),
         ("fig3", fig3.run),
         ("kernels", kernels_bench.run),
         ("cluster", cluster_sweep.run),
+        ("tune", tune_bench.run),
     ]
     try:
         from benchmarks import roofline
         sections.append(("roofline", roofline.run))
     except ImportError:
         pass
+    return sections
+
+
+def _structured(name: str):
+    """Optional machine-readable payload for the JSON snapshot.  Sections
+    are memoized upstream (tune cache, cluster lru_cache), so re-deriving
+    the structured view after the CSV pass costs little."""
+    if name == "tune":
+        from benchmarks import tune_bench
+        return tune_bench.generate()
+    if name == "fig2":
+        from benchmarks import fig2
+        rows, agg = fig2.generate()
+        return dict(rows=rows, aggregates=agg)
+    return None
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write a machine-readable BENCH_*.json "
+                         "snapshot of every section")
+    ap.add_argument("--sections", type=str, default=None,
+                    help="comma-separated subset to run "
+                         "(default: everything)")
+    args = ap.parse_args(argv)
+
+    sections = _sections()
+    if args.sections:
+        wanted = [s.strip() for s in args.sections.split(",") if s.strip()]
+        known = {name for name, _ in sections}
+        unknown = [s for s in wanted if s not in known]
+        if unknown:
+            ap.error(f"unknown sections {unknown}; known: {sorted(known)}")
+        sections = [(n, fn) for n, fn in sections if n in wanted]
+
+    snapshot: dict = {"schema": 1, "sections": {}}
     failures = []
     for name, fn in sections:
+        entry: dict = {"lines": [], "data": None, "error": None}
         try:
-            for line in fn():
+            entry["lines"] = list(fn())
+            for line in entry["lines"]:
                 print(line)
+            if args.json:
+                entry["data"] = _structured(name)
         except FileNotFoundError as e:
             print(f"{name}.skipped,missing_artifact,{e}")
+            entry["error"] = f"missing_artifact: {e}"
         except Exception:
             failures.append(name)
+            entry["error"] = traceback.format_exc()
             traceback.print_exc()
+        snapshot["sections"][name] = entry
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(snapshot, f, indent=1)
+        print(f"benchmarks.snapshot,{args.json},"
+              f"{len(snapshot['sections'])}_sections")
     if failures:
         print(f"benchmarks.failed,{','.join(failures)},")
         sys.exit(1)

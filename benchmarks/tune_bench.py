@@ -1,0 +1,141 @@
+"""Benchmark: tuned-vs-default COPIFT plans for the built-in kernels.
+
+For every tunable workload (``expf``, ``logf``, ``montecarlo``, ``prng``,
+``softmax``) this runs ``repro.tune`` over the standard knob space and
+reports the default (static Table-I) plan's predicted cost against the
+tuned plan's — the "headroom beyond the static schedule" number — plus the
+tuner-selected cluster operating point under a power cap.
+
+The default plan is always a member of the search space, so
+``predicted_speedup >= 1`` by construction; the interesting output is *how
+much* above 1 each kernel sits and *which* knob moved (fusion for the
+multi-phase kernels, block size off the Table-I cap when the problem size
+leaves remainder blocks).
+
+CLI:
+    PYTHONPATH=src python benchmarks/tune_bench.py              # CSV
+    PYTHONPATH=src python benchmarks/tune_bench.py --tiny       # CI smoke
+    PYTHONPATH=src python benchmarks/tune_bench.py --json out.json
+    PYTHONPATH=src python benchmarks/tune_bench.py --measured   # + wall time
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: Cluster power cap for the operating-point subsection (mW).
+POWER_CAP_MW = 350.0
+
+
+def _tiny_space(workload):
+    """A deliberately small space (CI smoke): two block rungs, plan knobs
+    only — exercises the whole search/cost/cache stack in seconds."""
+    from repro.tune import default_space
+    space = default_space(workload)
+    blocks = space.knob("block").values
+    space = space.with_values("block", blocks[-2:] if len(blocks) > 1
+                              else blocks)
+    space = space.with_values("movers", (space.default.movers,))
+    return space.with_values("pipelined", (True,))
+
+
+def generate(kernels=None, tiny: bool = False, measured: bool = False,
+             cluster: bool = True, use_cache: bool = False) -> dict:
+    """Structured rows for the CSV printer and the --json snapshot."""
+    from repro.tune import (BUILTIN_KERNELS, default_space, get_workload,
+                            measure_candidates, select_operating_point, tune)
+    kernels = kernels or list(BUILTIN_KERNELS)
+    cache = None if use_cache else False
+    rows = []
+    for name in kernels:
+        w = get_workload(name)
+        space = _tiny_space(w) if tiny else default_space(w)
+        res = tune(w, space=space, cache=cache)
+        row = dict(
+            kernel=name, method=res.method, n_evaluated=res.n_evaluated,
+            space_size=space.size, problem=res.problem,
+            default_block=res.default.block,
+            tuned=res.best.to_dict(),
+            default_cycles=res.default_cost.cycles,
+            tuned_cycles=res.best_cost.cycles,
+            predicted_speedup=res.predicted_speedup,
+            predicted_energy_saving=res.predicted_energy_saving)
+        if measured:
+            timed = measure_candidates(w, [res.default, res.best])
+            if len(timed) == 2:
+                d_us, t_us = timed[res.default], timed[res.best]
+                row.update(measured_default_us=d_us, measured_tuned_us=t_us,
+                           measured_speedup=d_us / t_us)
+        rows.append(row)
+    doc = dict(kernels=rows)
+    if cluster:
+        doc["operating_points"] = [
+            dict(kernel=name, power_cap_mw=POWER_CAP_MW,
+                 point=r.best.point, n_cores=r.best.n_cores,
+                 power_mw=r.best_cost.power_mw,
+                 saving_vs_nominal=r.predicted_energy_saving)
+            for name in kernels
+            for r in [select_operating_point(name,
+                                             power_cap_mw=POWER_CAP_MW,
+                                             cache=cache)]
+        ]
+    return doc
+
+
+def format_lines(doc: dict) -> list[str]:
+    lines = ["tune.kernel,block,fuse_fp,movers,pipelined,default_cycles,"
+             "tuned_cycles,predicted_speedup"]
+    for r in doc["kernels"]:
+        t = r["tuned"]
+        line = (f"tune.{r['kernel']},{t['block']},{t['fuse_fp']},"
+                f"{t['movers']},{t['pipelined']},{r['default_cycles']},"
+                f"{r['tuned_cycles']},{round(r['predicted_speedup'], 4)}")
+        if "measured_speedup" in r:
+            line += f",{round(r['measured_speedup'], 3)}"
+        lines.append(line)
+    for r in doc.get("operating_points", ()):
+        lines.append(
+            f"tune.point.{r['kernel']},{r['point']},{r['n_cores']},"
+            f"{round(r['power_mw'], 1)},{round(r['saving_vs_nominal'], 3)}")
+    return lines
+
+
+def run() -> list[str]:
+    """CSV section for ``benchmarks/run.py``."""
+    return format_lines(generate())
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="tiny search space (CI smoke)")
+    ap.add_argument("--measured", action="store_true",
+                    help="also wall-time default vs tuned as jit'd kernels")
+    ap.add_argument("--no-cluster", action="store_true",
+                    help="skip the operating-point subsection")
+    ap.add_argument("--cache", action="store_true",
+                    help="use the persistent tune cache (default: fresh)")
+    ap.add_argument("--kernels", type=str, default=None,
+                    help="comma-separated subset of the built-ins")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the structured report as JSON")
+    args = ap.parse_args(argv)
+    kernels = args.kernels.split(",") if args.kernels else None
+    doc = generate(kernels=kernels, tiny=args.tiny, measured=args.measured,
+                   cluster=not args.no_cluster, use_cache=args.cache)
+    for line in format_lines(doc):
+        print(line)
+    if args.json:
+        if args.json == "-":
+            json.dump(doc, sys.stdout, indent=1)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

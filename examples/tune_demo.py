@@ -1,0 +1,64 @@
+"""Autotuning walkthrough: from the paper's static Steps 4-7 choices to
+model-guided plans and cluster operating points (repro.tune).
+
+Run:  PYTHONPATH=src python examples/tune_demo.py
+"""
+
+import os
+import tempfile
+import time
+
+from repro.core.analytics import TABLE_I
+from repro.tune import (BUILTIN_KERNELS, TuneCache, default_space,
+                        get_workload, select_operating_point, tune)
+
+
+def main():
+    print("— the search space (expf) —")
+    w = get_workload("expf")
+    space = default_space(w)
+    for k in space.knobs:
+        print(f"  {k.name:10s} {list(k.values)}")
+    print(f"  {space.size} candidates; default = static plan {space.default}")
+
+    print("\n— tuned vs default, every built-in kernel —")
+    print(f"{'kernel':12s} {'block':>5s} {'fuse':>5s} {'pipe':>5s} "
+          f"{'default cyc':>12s} {'tuned cyc':>10s} {'speedup':>8s}")
+    for name in BUILTIN_KERNELS:
+        res = tune(name, cache=False)
+        b = res.best
+        print(f"{name:12s} {b.block:5d} {str(b.fuse_fp):>5s} "
+              f"{str(b.pipelined):>5s} {res.default_cost.cycles:12d} "
+              f"{res.best_cost.cycles:10d} {res.predicted_speedup:8.4f}")
+
+    print("\n— the tuner generalizes the Table-I rule —")
+    sp = default_space(w)
+    for knob in ("fuse_fp", "movers", "pipelined"):
+        sp = sp.with_values(knob, (getattr(sp.default, knob),))
+    pinned = tune(w, problem=64 * w.max_block, space=sp, cache=False)
+    print(f"expf, knobs pinned to the paper's: tuned block = "
+          f"{pinned.best.block} (Table I Max Block = "
+          f"{TABLE_I['expf'].max_block})")
+
+    print("\n— cluster operating point under a 350 mW cap (energy) —")
+    for name in ("expf", "montecarlo"):
+        res = select_operating_point(name, power_cap_mw=350.0, cache=False)
+        print(f"{name:12s} -> {res.best.point} x{res.best.n_cores} cores, "
+              f"{res.best_cost.power_mw:.1f} mW, "
+              f"{res.predicted_energy_saving:.2f}x energy vs nominal")
+
+    print("\n— the persistent cache makes repeat calls free —")
+    with tempfile.TemporaryDirectory() as d:
+        cache = TuneCache(os.path.join(d, "cache.json"))
+        t0 = time.perf_counter()
+        tune("softmax", cache=cache)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        hit = tune("softmax", cache=cache)
+        warm = time.perf_counter() - t0
+        print(f"cold search {cold * 1e3:.0f} ms -> cached {warm * 1e3:.2f} ms "
+              f"(from_cache={hit.from_cache})")
+
+
+if __name__ == "__main__":
+    main()

@@ -116,12 +116,32 @@ def choose_block(n_buffers_after_pipelining: int, requested: int | None = None,
     """Table-I 'Max Block' logic: the largest block whose replica set fits
     the scratch budget, optionally clamped to a requested size."""
     cap = _schedule.max_block(n_buffers_after_pipelining, budget_dwords)
-    return min(requested, cap) if requested else cap
+    if requested is None:
+        return cap
+    if requested < 1:
+        raise ValueError(f"requested block must be >= 1, got {requested}")
+    return min(requested, cap)
 
 
 def make_plan(name: str, phases: Sequence[PhaseDef], n_elements: int,
-              block: int | None = None) -> CopiftPlan:
-    """Steps 3–7 for an explicitly phase-decomposed computation."""
+              block: int | None = None,
+              tune: bool = False, tune_objective: str = "cycles") -> CopiftPlan:
+    """Steps 3–7 for an explicitly phase-decomposed computation.
+
+    ``tune=True`` asks the autotuner (``repro.tune``) for the block size
+    when ``name`` matches a tunable built-in workload and no explicit
+    ``block`` was given; the tuned choice is still clamped to this plan's
+    own scratch budget.  Unknown names keep the static Table-I rule.
+    """
+    if tune and block is None:
+        # Deferred import (tune builds on core); block-only search — a
+        # block from the joint argmin is only valid with the fusion and
+        # pipelining choices it was found with, which this plan keeps.
+        from repro.tune import select_block
+        try:
+            block = select_block(name, objective=tune_objective).best.block
+        except KeyError:
+            block = None  # not a tunable workload -> static Max Block rule
     # Buffer replicas: producer→consumer distance + 1 (Step 5).
     producers: dict[str, int] = {}
     replicas: dict[str, int] = {}

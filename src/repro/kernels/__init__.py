@@ -8,8 +8,8 @@ execution on CPU; TPU is the compilation target).
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import (exp, log, mc_pi, mc_poly, set_default_impl,
-                               softmax, uniform)
+from repro.kernels.ops import (enable_tuned_defaults, exp, log, mc_pi,
+                               mc_poly, set_default_impl, softmax, uniform)
 
-__all__ = ["ops", "ref", "exp", "log", "mc_pi", "mc_poly",
-           "set_default_impl", "softmax", "uniform"]
+__all__ = ["ops", "ref", "enable_tuned_defaults", "exp", "log", "mc_pi",
+           "mc_poly", "set_default_impl", "softmax", "uniform"]

@@ -36,6 +36,7 @@ from repro.kernels import softmax_tpu as _softmax
 LANES = _exp.LANES
 
 _DEFAULT_IMPL = "auto"
+_TUNED_DEFAULTS = False
 
 
 def set_default_impl(impl: str) -> None:
@@ -43,6 +44,37 @@ def set_default_impl(impl: str) -> None:
     global _DEFAULT_IMPL
     assert impl in ("auto", "pallas", "reference")
     _DEFAULT_IMPL = impl
+
+
+def enable_tuned_defaults(enable: bool = True) -> None:
+    """Let the autotuner (``repro.tune``) pick the kernels' default block
+    tiling.  Entry points called without an explicit ``block_rows`` then
+    scale the module default by the tuned block's share of the Table-I cap
+    (the analytic model's block choice transferred onto the Pallas grid);
+    tuned results come from the persistent tune cache, so the first call
+    per kernel searches and the rest are free."""
+    global _TUNED_DEFAULTS
+    _TUNED_DEFAULTS = enable
+    _tuned_block_rows.cache_clear()
+
+
+@functools.lru_cache(maxsize=None)
+def _tuned_block_rows(kernel: str, default_rows: int) -> int:
+    from repro import tune as _tune
+    w = _tune.get_workload(kernel)
+    res = _tune.select_block(w)   # only the block transfers to the tiling
+    return max(1, round(default_rows * res.best.block / w.max_block))
+
+
+def _resolve_rows(kernel: str, explicit: int | None, default_rows: int) -> int:
+    if explicit is not None:
+        return explicit
+    if _TUNED_DEFAULTS:
+        try:
+            return _tuned_block_rows(kernel, default_rows)
+        except (ImportError, KeyError):
+            pass
+    return default_rows
 
 
 def _resolve(impl: str | None) -> str:
@@ -70,20 +102,22 @@ def _untile(y: jax.Array, n: int, shape, dtype):
 
 
 def exp(x: jax.Array, impl: str | None = None,
-        block_rows: int = _exp.DEFAULT_BLOCK_ROWS) -> jax.Array:
+        block_rows: int | None = None) -> jax.Array:
     """COPIFT exp (glibc-expf-style), elementwise, any shape."""
     if _resolve(impl) == "reference":
         return _ref.exp_ref(x).astype(x.dtype)
+    block_rows = _resolve_rows("expf", block_rows, _exp.DEFAULT_BLOCK_ROWS)
     tiled, n = _tile_1d(x, block_rows)
     y = _exp.exp_2d(tiled, block_rows=block_rows, interpret=_interpret())
     return _untile(y, n, x.shape, x.dtype)
 
 
 def log(x: jax.Array, impl: str | None = None,
-        block_rows: int = _log.DEFAULT_BLOCK_ROWS) -> jax.Array:
+        block_rows: int | None = None) -> jax.Array:
     """COPIFT log (glibc-logf-style, ISSR table gather), positive normals."""
     if _resolve(impl) == "reference":
         return _ref.log_ref(x).astype(x.dtype)
+    block_rows = _resolve_rows("logf", block_rows, _log.DEFAULT_BLOCK_ROWS)
     tiled, n = _tile_1d(x, block_rows)
     tiled = jnp.where(tiled <= 0, 1.0, tiled)   # padding lanes → ln(1)=0
     y = _log.log_2d(tiled, block_rows=block_rows, interpret=_interpret())
@@ -91,11 +125,12 @@ def log(x: jax.Array, impl: str | None = None,
 
 
 def softmax(x: jax.Array, axis: int = -1, impl: str | None = None,
-            block_rows: int = 8) -> jax.Array:
+            block_rows: int | None = None) -> jax.Array:
     """COPIFT softmax.  Pallas path: 2-D row-tiled kernel over the last
     axis; other axes / ragged rows fall back to the reference path."""
     if _resolve(impl) == "reference" or axis not in (-1, x.ndim - 1):
         return _ref.softmax_ref(x, axis=axis)
+    block_rows = _resolve_rows("softmax", block_rows, 8)
     lead = x.shape[:-1]
     rows = int(np.prod(lead)) if lead else 1
     cols = x.shape[-1]
@@ -110,7 +145,7 @@ def softmax(x: jax.Array, axis: int = -1, impl: str | None = None,
 
 def uniform(seed: int | jax.Array, shape: tuple[int, ...],
             kind: str = "xoshiro128p", impl: str | None = None,
-            block_rows: int = _prng.DEFAULT_BLOCK_ROWS) -> jax.Array:
+            block_rows: int | None = None) -> jax.Array:
     """Deterministic counter-based uniforms in [0, 1) (paper's PRNGs)."""
     n = int(np.prod(shape))
     if _resolve(impl) == "reference":
@@ -118,6 +153,7 @@ def uniform(seed: int | jax.Array, shape: tuple[int, ...],
         u = _prng.uniform_counter_ref(int(seed) if not hasattr(seed, "dtype")
                                       else seed, (rows, LANES), kind=kind)
         return u.reshape(-1)[:n].reshape(shape)
+    block_rows = _resolve_rows("prng", block_rows, _prng.DEFAULT_BLOCK_ROWS)
     tile = block_rows * LANES
     rows = (-(-n // tile)) * block_rows
     u = _prng.uniform_2d(jnp.uint32(seed), kind=kind, block_rows=block_rows,

@@ -48,7 +48,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--autotune", action="store_true",
+                    help="let repro.tune pick the COPIFT kernel tilings "
+                         "(cached; first run searches, later runs are free)")
     args = ap.parse_args(argv)
+
+    if args.autotune:
+        from repro.kernels import ops as kops
+        kops.enable_tuned_defaults(True)
+        print("[tune] kernel block tilings autotuned (repro.tune cache)")
 
     cfg = load_config(args.arch, args.variant)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")

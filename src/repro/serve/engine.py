@@ -63,13 +63,23 @@ class ServeEngine:
     """Batched greedy/temperature decoding over a fixed slot set."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
-                 batch: int = 4, temperature: float = 0.0, seed: int = 0):
+                 batch: int = 4, temperature: float = 0.0, seed: int = 0,
+                 autotune: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.batch = batch
         self.temperature = temperature
         self.seed = seed
+        self.autotune = autotune
+        if autotune:
+            # Engine setup is where tuning pays: the softmax/PRNG kernels
+            # run every decode step, so let repro.tune pick their tiling
+            # once (cached) before the jit traces below bake it in.  The
+            # kernel defaults are process-wide state, so this affects all
+            # subsequent kernel calls; revert with
+            # ``repro.kernels.enable_tuned_defaults(False)``.
+            kops.enable_tuned_defaults(True)
         self._prefill = jax.jit(make_prefill(cfg))
         self._step = jax.jit(make_serve_step(cfg))
 

@@ -1,0 +1,52 @@
+"""Model-guided autotuning of COPIFT plans and cluster operating points.
+
+The paper's Steps 4-7 choices — block size via the Table-I "Max Block"
+rule, phase fusion, stream-to-mover assignment — are fixed heuristics, yet
+Fig. 3 shows IPC varies strongly across problem x block sizes.  This
+subsystem closes the loop between the calibrated cost models and those
+choices: it declares the searchable knobs, prices every candidate through
+one unified analytic oracle (the single-PE discrete-event model composed
+with the ``repro.cluster`` contention/DMA/DVFS machinery), searches the
+space, and remembers the winners.
+
+Layer map (mirrors ``repro.core``'s and ``repro.cluster``'s):
+
+* ``space``     — ``Knob`` / ``SearchSpace`` / ``Candidate``: the searchable
+  plan parameters (block size, FP-phase fusion, SSR/mover assignment,
+  pipelining on/off; at cluster scope cores x DVFS point under a power cap)
+* ``workloads`` — the tunable built-in kernels (``expf``, ``logf``,
+  ``montecarlo``, ``prng``, ``softmax``) bound to their ISA-level schedules
+* ``cost``      — ``evaluate(workload, candidate) -> CostEstimate``: the
+  unified oracle wrapping ``core.timing`` and the cluster composition into
+  ``{cycles, time, energy, ipc, power}``
+* ``search``    — exhaustive search for small spaces, successive halving +
+  local search for large ones, optional measured refinement of the top-K
+  candidates as real jit'd kernels; ``tune()`` is the front door
+* ``cache``     — persistent JSON cache keyed by (kernel, problem, dtype,
+  arch config, objective, space) so repeat calls are free
+
+Invariant (pinned in ``tests/test_tune.py``): with fusion off, the default
+mover assignment, pipelining on, one core and the nominal DVFS point, the
+tuned block size reproduces the Table-I "Max Block" choice — the tuner
+strictly generalizes the paper's static rule.
+"""
+
+from repro.tune.cache import TuneCache, cache_key, default_cache
+from repro.tune.cost import CostEstimate, evaluate, objective_value
+from repro.tune.search import (Evaluated, TuneResult, exhaustive_search,
+                               local_search, measure_candidates,
+                               select_block, select_operating_point,
+                               successive_halving, tune)
+from repro.tune.space import Candidate, Knob, SearchSpace, default_space
+from repro.tune.workloads import (BUILTIN_KERNELS, WORKLOADS, Workload,
+                                  get_workload)
+
+__all__ = [
+    "TuneCache", "cache_key", "default_cache",
+    "CostEstimate", "evaluate", "objective_value",
+    "Evaluated", "TuneResult", "exhaustive_search", "local_search",
+    "measure_candidates", "select_block", "select_operating_point",
+    "successive_halving", "tune",
+    "Candidate", "Knob", "SearchSpace", "default_space",
+    "BUILTIN_KERNELS", "WORKLOADS", "Workload", "get_workload",
+]

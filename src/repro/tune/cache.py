@@ -1,0 +1,122 @@
+"""Persistent tuning cache — repeat ``tune()`` calls are free.
+
+One JSON file maps content-addressed keys to serialized ``TuneResult``
+payloads.  The key covers everything the result is a pure function of:
+workload name, problem size, dtype, the architecture config (cores, banks,
+DMA width, the full DVFS ladder and nominal point), the objective, the
+power cap, and the space's knob/value lists — change any of them and the
+entry simply misses, so stale results can't leak across configs.
+
+Location: ``$REPRO_TUNE_CACHE`` if set, else
+``~/.cache/repro-tune/cache.json``.  Writes are atomic
+(write-temp-then-rename), so concurrent processes at worst lose an entry,
+never corrupt the file; unreadable or wrong-schema files are treated as
+empty rather than fatal.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+from repro.cluster.topology import ClusterConfig
+from repro.tune.space import SearchSpace
+
+SCHEMA_VERSION = 1
+
+
+def _default_path() -> str:
+    env = os.environ.get("REPRO_TUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-tune",
+                        "cache.json")
+
+
+def cache_key(workload: str, problem: int, cfg: ClusterConfig,
+              objective: str, power_cap_mw: float | None,
+              space: SearchSpace, dtype: str = "fp64",
+              measure_top_k: int = 0) -> str:
+    """Content-addressed key over everything the tune result depends on."""
+    doc = dict(
+        schema=SCHEMA_VERSION,
+        workload=workload, problem=problem, dtype=dtype,
+        objective=objective, power_cap_mw=power_cap_mw,
+        measure_top_k=measure_top_k,
+        arch=dict(
+            n_cores=cfg.n_cores, tcdm_banks=cfg.tcdm_banks,
+            dma_bytes_per_cycle=cfg.dma_bytes_per_cycle,
+            nominal=cfg.nominal.name,
+            points=[(p.name, p.freq_ghz, p.vdd)
+                    for p in cfg.operating_points]),
+        space=dict(
+            default=space.default.to_dict(),
+            knobs={k.name: list(k.values) for k in space.knobs}),
+    )
+    blob = json.dumps(doc, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()
+
+
+class TuneCache:
+    """Lazy-loading JSON store of tune results."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = str(path) if path else _default_path()
+        self._data: dict | None = None
+
+    def _load(self) -> dict:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                if (not isinstance(data, dict)
+                        or data.get("schema") != SCHEMA_VERSION
+                        or not isinstance(data.get("entries"), dict)):
+                    data = None
+            except (OSError, ValueError):
+                data = None
+            self._data = data or {"schema": SCHEMA_VERSION, "entries": {}}
+        return self._data
+
+    def __len__(self) -> int:
+        return len(self._load()["entries"])
+
+    def get(self, key: str) -> dict | None:
+        return self._load()["entries"].get(key)
+
+    def put(self, key: str, payload: dict) -> None:
+        data = self._load()
+        data["entries"][key] = payload
+        self._flush()
+
+    def clear(self) -> None:
+        self._data = {"schema": SCHEMA_VERSION, "entries": {}}
+        self._flush()
+
+    def _flush(self) -> None:
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".tune-cache-", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+_DEFAULT_CACHE: TuneCache | None = None
+
+
+def default_cache() -> TuneCache:
+    """The shared process-wide cache at the default path."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != _default_path():
+        _DEFAULT_CACHE = TuneCache()
+    return _DEFAULT_CACHE

@@ -1,0 +1,215 @@
+"""The unified analytic cost oracle: ``evaluate(workload, candidate)``.
+
+One candidate is priced end-to-end through the calibrated machinery:
+
+1. *Schedule rewrite* — the knobs are applied to the workload's
+   ``CopiftSchedule``: FP phases concatenated when fused (one FREP loop,
+   fewer setups, shallower pipeline), demoted streams turned into explicit
+   integer-LSU accesses (one load + pointer bump per element per demoted
+   mover), and the replica set shrunk to the Step-4 distinct buffers when
+   pipelining is off.
+2. *Per-core cycles* — ``core.timing.copift_problem_timing`` for pipelined
+   candidates (fill/steady/drain, the Fig. 3 machinery); for unpipelined
+   ones the serial sum of the integer and FP phase costs per block.
+3. *Cluster composition* — block-cyclic split across ``n_cores``, the
+   inter-core TCDM bank surcharge from the candidate's own access profile
+   (zero at one core — the single-PE reduction), and double-buffered DMA
+   refill (``max(compute, transfer)``).
+4. *Operating point* — time from the point's frequency; power from the
+   component model re-expressed at the point (dyn ∝ f·V², leak ∝ V²); a
+   cluster power cap marks candidates infeasible rather than silently
+   clipping them.
+
+At the space's default candidate (Table-I block, no fusion, natural
+movers, pipelined, one core, nominal point) every term reduces to the
+paper-calibrated single-PE numbers — the oracle strictly extends the
+ground truth, as ``repro.cluster`` does.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+
+from repro.cluster.contention import (PATTERN_AFFINE, PATTERN_RANDOM,
+                                      AccessProfile)
+from repro.cluster.dma import transfer_cycles
+from repro.cluster.dvfs import scale_breakdown
+from repro.cluster.scheduler import block_cyclic
+from repro.cluster.topology import (SNITCH_CLUSTER, ClusterConfig,
+                                    OperatingPoint)
+from repro.core.energy import (L0_CAPACITY, P_CONST, P_DMA, P_FETCH_FREP,
+                               P_FETCH_L0, P_FETCH_L1, P_FPU, P_INT, P_LSU,
+                               P_SSR, PowerBreakdown)
+from repro.core.isa import Instr, count_mem_accesses
+from repro.core.timing import (PROGRAM_PROLOGUE_CYCLES, CopiftSchedule,
+                               copift_block_timing, copift_problem_timing,
+                               thread_cycles)
+from repro.tune.space import Candidate
+from repro.tune.workloads import Workload, get_workload
+
+#: Objectives the searches can minimize.
+OBJECTIVES = ("cycles", "time", "energy", "edp")
+
+
+@dataclass(frozen=True)
+class CostEstimate:
+    """What one candidate costs for one whole problem on the cluster."""
+    cycles: int              # cluster cycles (frequency-independent)
+    time_ns: float           # cycles at the candidate's operating point
+    energy_pj: float         # cluster energy for the whole problem
+    ipc: float               # cluster-aggregate instructions per cycle
+    power_mw: float          # cluster power at the operating point
+    feasible: bool           # within the cluster power cap
+    dma_bound: bool
+
+    @property
+    def edp(self) -> float:
+        return self.energy_pj * self.time_ns
+
+
+def objective_value(est: CostEstimate, objective: str) -> float:
+    """Scalar to minimize.  ``cycles`` and ``time`` differ only when the
+    space sweeps operating points (cycles are frequency-independent)."""
+    try:
+        return {"cycles": est.cycles, "time": est.time_ns,
+                "energy": est.energy_pj, "edp": est.edp}[objective]
+    except KeyError:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}") from None
+
+
+def tuned_schedule(workload: Workload, cand: Candidate) -> CopiftSchedule:
+    """Apply the plan-level knobs to the workload's schedule."""
+    sched = workload.schedule()
+    fp_bodies = [list(b) for b in sched.fp_bodies]
+    fused = cand.fuse_fp and len(fp_bodies) > 1
+    if fused:
+        fp_bodies = [[ins for body in fp_bodies for ins in body]]
+    int_body = list(sched.int_body)
+    movers = min(max(1, cand.movers), sched.n_ssrs)
+    for i in range(sched.n_ssrs - movers):
+        # A demoted stream loses its data mover: its traffic goes through
+        # the integer LSU instead, one load + pointer bump per element.
+        int_body += [
+            Instr("lw", f"dm{i}", (f"loop:pdm{i}", f"mem:dm{i}")),
+            Instr("addi", f"loop:pdm{i}", (f"loop:pdm{i}",)),
+        ]
+    replicas = (sched.n_buffer_replicas if cand.pipelined
+                else workload.n_buffers_serial)
+    return CopiftSchedule(
+        sched.name, int_body=int_body, fp_bodies=fp_bodies, n_ssrs=movers,
+        n_buffer_replicas=replicas,
+        phase_order=() if fused else sched.phase_order)
+
+
+def _per_core_cycles(sched: CopiftSchedule, blocks_per_core: int, block: int,
+                     pipelined: bool, extra_contention: float) -> int:
+    """Cycles the slowest core spends on its ``blocks_per_core`` blocks."""
+    if pipelined:
+        bt = copift_problem_timing(sched, blocks_per_core * block, block,
+                                   extra_contention=extra_contention)
+        return bt.cycles
+    # Serial (Fig. 1f): every phase runs to completion on each block; no
+    # int/FP overlap, but also no first-FREP-iteration handoff and the
+    # smaller Step-4 buffer set.
+    contention = (0.25 if sched.n_ssrs else 0.0) + extra_contention
+    int_blk = thread_cycles(sched.int_body, block, tcdm_contention=contention)
+    fp_blk = sum(thread_cycles(b, block) for b in sched.fp_bodies)
+    per_block = int_blk + sched.block_overhead_instrs() + fp_blk
+    return PROGRAM_PROLOGUE_CYCLES + blocks_per_core * per_block
+
+
+def _access_profile(workload: Workload, sched: CopiftSchedule,
+                    block: int) -> AccessProfile:
+    """The candidate's own TCDM request rate (mirrors
+    ``cluster.contention.copift_profile``, but for the rewritten
+    schedule rather than the registry one)."""
+    bt = copift_block_timing(sched, block)
+    int_mem = count_mem_accesses(sched.int_body) * block
+    stream_beats = 2 * sched.n_ssrs * block
+    pattern = PATTERN_RANDOM if workload.uses_issr else PATTERN_AFFINE
+    return AccessProfile(name=workload.name,
+                         requests_per_cycle=(int_mem + stream_beats)
+                         / bt.cycles,
+                         pattern=pattern)
+
+
+def _core_power(workload: Workload, sched: CopiftSchedule,
+                block: int) -> PowerBreakdown:
+    """One PE's power for the rewritten schedule (mirrors
+    ``energy.copift_power`` with the candidate's own utilizations)."""
+    bt = copift_block_timing(sched, block)
+    cyc = bt.cycles
+    u_int = (sched.n_int * block + sched.block_overhead_instrs()) / cyc
+    u_fp = sched.n_fp * block / cyc
+    int_mem = count_mem_accesses(sched.int_body) * block
+    stream_beats = 2 * sched.n_ssrs * block
+    u_mem = (int_mem + stream_beats) / cyc
+    int_fetch = (P_FETCH_L0 if len(sched.int_body) <= L0_CAPACITY
+                 else P_FETCH_L1) * u_int
+    return PowerBreakdown(
+        const=P_CONST, int_dp=P_INT * u_int, fpu=P_FPU * u_fp,
+        lsu=P_LSU * u_mem, fetch=int_fetch + P_FETCH_FREP * u_fp,
+        dma=P_DMA if workload.bytes_per_elem else 0.0,
+        ssr=P_SSR * sched.n_ssrs)
+
+
+def _resolve_point(cfg: ClusterConfig, name: str) -> OperatingPoint:
+    for p in cfg.operating_points:
+        if p.name == name:
+            return p
+    raise ValueError(f"operating point {name!r} not in the ladder: "
+                     f"{[p.name for p in cfg.operating_points]}")
+
+
+@lru_cache(maxsize=16384)
+def _evaluate(workload: Workload, cand: Candidate, problem: int,
+              cfg: ClusterConfig, power_cap_mw: float | None) -> CostEstimate:
+    point = _resolve_point(cfg, cand.point)
+    sched = tuned_schedule(workload, cand)
+    block = cand.block
+    total_blocks = max(1, math.ceil(problem / block))
+    assignment = block_cyclic(total_blocks, cand.n_cores)
+    n_active = assignment.cores_active(0)
+    extra = _access_profile(workload, sched, block).extra_stalls(cfg, n_active)
+
+    compute = _per_core_cycles(sched, assignment.max_blocks, block,
+                               cand.pipelined, extra)
+    transfer = (transfer_cycles(cfg, workload.bytes_per_elem * problem)
+                if workload.bytes_per_elem else 0)
+    cycles = max(compute, transfer)
+
+    time_ns = cycles / point.freq_ghz
+    per_core_mw = scale_breakdown(_core_power(workload, sched, block),
+                                  point, cfg.nominal).total
+    power_mw = per_core_mw * n_active
+    instrs = ((sched.n_int + sched.n_fp) * problem
+              + sched.block_overhead_instrs() * total_blocks)
+    return CostEstimate(
+        cycles=cycles, time_ns=time_ns, energy_pj=power_mw * time_ns,
+        ipc=instrs / cycles, power_mw=power_mw,
+        feasible=(power_cap_mw is None or power_mw <= power_cap_mw),
+        dma_bound=transfer > compute)
+
+
+def evaluate(workload: Workload | str, cand: Candidate,
+             problem: int | None = None,
+             cfg: ClusterConfig = SNITCH_CLUSTER,
+             power_cap_mw: float | None = None) -> CostEstimate:
+    """Price one candidate for ``problem`` elements of ``workload``.
+
+    Memoized on the full argument tuple — sweeps and repeated searches
+    re-price shared candidates for free within a process (the persistent
+    ``tune.cache`` handles the across-process case).
+    """
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    if cand.block < 1:
+        raise ValueError(f"block must be >= 1, got {cand.block}")
+    if cand.block > w.max_block:
+        raise ValueError(f"block {cand.block} exceeds {w.name}'s L1 cap "
+                         f"{w.max_block}")
+    if cand.n_cores < 1:
+        raise ValueError(f"n_cores must be >= 1, got {cand.n_cores}")
+    return _evaluate(w, cand, problem or w.default_problem, cfg, power_cap_mw)

@@ -1,0 +1,357 @@
+"""Search strategies over a ``SearchSpace`` + the ``tune()`` front door.
+
+* ``exhaustive_search``   — price every candidate; exact argmin.  The
+  default for small spaces (analytic evaluations are milliseconds).
+* ``successive_halving``  — for large spaces: evaluate everything at a
+  cheap fidelity (a fraction of the problem size), keep the top 1/eta,
+  re-evaluate at the next fidelity, until the survivors are priced at the
+  full problem.
+* ``local_search``        — hill climbing over single-knob neighbor moves;
+  used to polish the halving winner (and available standalone).
+* ``measure_candidates``  — optional measured-refinement pass: wall-time
+  the top-K candidates as real jit'd kernels via ``repro.kernels`` and
+  re-rank by what the hardware actually did.
+
+Determinism: every strategy breaks objective ties with
+``Candidate.sort_key`` (prefer the static plan's neighborhood), so a
+search result is a pure function of (workload, space, problem, config) —
+which is also what makes the persistent cache sound.
+
+The best candidate is always compared against the space's default before
+returning: ``tune()`` can return the default, but never anything worse.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.cluster.topology import SNITCH_CLUSTER, ClusterConfig
+from repro.tune import cache as _cache
+from repro.tune.cost import (OBJECTIVES, CostEstimate, evaluate,
+                             objective_value)
+from repro.tune.space import Candidate, SearchSpace, default_space
+from repro.tune.workloads import Workload, get_workload
+
+
+@dataclass(frozen=True)
+class Evaluated:
+    """One priced candidate."""
+    candidate: Candidate
+    cost: CostEstimate
+
+
+def _best(evaluated: list[Evaluated], objective: str) -> Evaluated:
+    """Deterministic argmin: feasible candidates only (falling back to the
+    lowest-power one if the cap excludes everything — the cluster must
+    throttle there anyway, as in ``dvfs.optimal_point``)."""
+    if not evaluated:
+        raise ValueError("nothing evaluated")
+    pool = [e for e in evaluated if e.cost.feasible]
+    if not pool:
+        pool = [min(evaluated, key=lambda e: (e.cost.power_mw,
+                                              e.candidate.sort_key()))]
+    return min(pool, key=lambda e: (objective_value(e.cost, objective),
+                                    e.candidate.sort_key()))
+
+
+@dataclass
+class TuneResult:
+    """What ``tune()`` returns (and what the cache persists)."""
+    workload: str
+    problem: int
+    objective: str
+    best: Candidate
+    best_cost: CostEstimate
+    default: Candidate
+    default_cost: CostEstimate
+    method: str
+    n_evaluated: int
+    from_cache: bool = False
+    measured_us: dict = field(default_factory=dict)   # candidate repr -> µs
+
+    @property
+    def predicted_speedup(self) -> float:
+        """Default plan cycles over tuned plan cycles (>= 1 by search
+        construction when the objective is cycles/time)."""
+        return self.default_cost.cycles / self.best_cost.cycles
+
+    @property
+    def predicted_energy_saving(self) -> float:
+        return self.default_cost.energy_pj / self.best_cost.energy_pj
+
+    def to_dict(self) -> dict:
+        return dict(
+            workload=self.workload, problem=self.problem,
+            objective=self.objective, best=self.best.to_dict(),
+            best_cost=vars(self.best_cost).copy(),
+            default=self.default.to_dict(),
+            default_cost=vars(self.default_cost).copy(),
+            method=self.method, n_evaluated=self.n_evaluated,
+            measured_us=dict(self.measured_us))
+
+    @classmethod
+    def from_dict(cls, d: dict, from_cache: bool = False) -> "TuneResult":
+        return cls(
+            workload=d["workload"], problem=d["problem"],
+            objective=d["objective"],
+            best=Candidate.from_dict(d["best"]),
+            best_cost=CostEstimate(**d["best_cost"]),
+            default=Candidate.from_dict(d["default"]),
+            default_cost=CostEstimate(**d["default_cost"]),
+            method=d["method"], n_evaluated=d["n_evaluated"],
+            from_cache=from_cache, measured_us=dict(d.get("measured_us", {})))
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+def exhaustive_search(workload: Workload, space: SearchSpace, problem: int,
+                      cfg: ClusterConfig = SNITCH_CLUSTER,
+                      objective: str = "cycles",
+                      power_cap_mw: float | None = None
+                      ) -> tuple[Evaluated, list[Evaluated]]:
+    """Price every candidate; exact argmin under the deterministic order.
+    Returns (best, everything evaluated at full fidelity)."""
+    evaluated = [Evaluated(c, evaluate(workload, c, problem, cfg,
+                                       power_cap_mw))
+                 for c in space.candidates()]
+    return _best(evaluated, objective), evaluated
+
+
+def local_search(workload: Workload, space: SearchSpace, problem: int,
+                 cfg: ClusterConfig = SNITCH_CLUSTER,
+                 objective: str = "cycles",
+                 power_cap_mw: float | None = None,
+                 start: Candidate | None = None,
+                 max_steps: int = 64) -> tuple[Evaluated, list[Evaluated]]:
+    """Hill climbing over single-knob neighbor moves from ``start``
+    (default: the space's default candidate) to a local optimum."""
+    cur = Evaluated(start or space.default,
+                    evaluate(workload, start or space.default, problem, cfg,
+                             power_cap_mw))
+    seen = [cur]
+    for _ in range(max_steps):
+        moves = [Evaluated(c, evaluate(workload, c, problem, cfg,
+                                       power_cap_mw))
+                 for c in space.neighbors(cur.candidate)]
+        seen += moves
+        nxt = _best(moves + [cur], objective)
+        if nxt.candidate == cur.candidate:
+            break
+        cur = nxt
+    return cur, seen
+
+
+def successive_halving(workload: Workload, space: SearchSpace, problem: int,
+                       cfg: ClusterConfig = SNITCH_CLUSTER,
+                       objective: str = "cycles",
+                       power_cap_mw: float | None = None,
+                       eta: int = 4) -> tuple[Evaluated, list[Evaluated]]:
+    """Fidelity ladder: evaluate all candidates on a scaled-down problem,
+    keep the top ``1/eta`` per rung, finish the survivors at full size.
+    The fidelity floor is a few blocks of the largest block size, so even
+    the cheapest rung exercises the per-block overheads being tuned.
+    The returned list holds only the final rung (full-fidelity costs)."""
+    cands = list(space.candidates())
+    floor = 4 * max(space.knob("block").values)
+    rungs = 0
+    while eta ** (rungs + 1) < len(cands) and problem // eta ** (rungs + 1) >= floor:
+        rungs += 1
+    for r in range(rungs, -1, -1):
+        fidelity = max(floor, problem // eta ** r) if r else problem
+        evals = [Evaluated(c, evaluate(workload, c, fidelity, cfg,
+                                       power_cap_mw))
+                 for c in cands]
+        if r == 0:
+            return _best(evals, objective), evals
+        evals.sort(key=lambda e: (not e.cost.feasible,
+                                  objective_value(e.cost, objective),
+                                  e.candidate.sort_key()))
+        cands = [e.candidate for e in evals[:max(1, len(evals) // eta)]]
+    raise AssertionError("unreachable")
+
+
+# ---------------------------------------------------------------------------
+# Measured refinement
+# ---------------------------------------------------------------------------
+
+def measure_candidates(workload: Workload | str, cands: list[Candidate],
+                       problem: int | None = None,
+                       repeats: int = 3) -> dict[Candidate, float]:
+    """Wall-time candidates as real jit'd kernels (µs per call, best of
+    ``repeats``).  The analytic block choice is transferred onto the Pallas
+    tiling by scaling the kernel's default ``block_rows`` with
+    ``tuned_block / max_block`` (the same rule ``kernels.ops`` applies).
+    Returns ``{}`` when the kernel stack is unavailable (e.g. a stripped
+    install) — measurement refines, it never gates."""
+    import time
+
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    problem = problem or w.default_problem
+    try:
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as kops
+    except Exception:                                  # pragma: no cover
+        return {}
+
+    def runner(cand: Candidate):
+        # Every runner must consume the candidate's block knob — otherwise
+        # identical executables get re-timed and the "winner" is jitter.
+        share = cand.block / w.max_block
+        rows = max(1, round(64 * share))
+        n = max(problem, 2 * kops.LANES)
+        if w.name == "expf":
+            x = jnp.linspace(-3.0, 3.0, n, dtype=jnp.float32)
+            return lambda: kops.exp(x, block_rows=rows)
+        if w.name == "logf":
+            x = jnp.linspace(0.5, 4.0, n, dtype=jnp.float32)
+            return lambda: kops.log(x, block_rows=rows)
+        if w.name == "softmax":
+            x = jnp.linspace(-1.0, 1.0, n,
+                             dtype=jnp.float32).reshape(-1, kops.LANES)
+            return lambda: kops.softmax(x, block_rows=max(1, round(8 * share)))
+        if w.name == "prng":
+            return lambda: kops.uniform(0, (n,), block_rows=rows)
+        if w.name == "montecarlo":
+            return lambda: kops.mc_pi(0, n_samples=n,
+                                      n_blocks=max(1, round(8 * share)))
+        raise KeyError(w.name)
+
+    out: dict[Candidate, float] = {}
+    for cand in cands:
+        try:
+            fn = runner(cand)
+            fn()  # warm the jit cache before timing
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                import jax
+                jax.block_until_ready(fn())
+                best = min(best, (time.perf_counter() - t0) * 1e6)
+            out[cand] = best
+        except Exception:                              # pragma: no cover
+            continue
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Front door
+# ---------------------------------------------------------------------------
+
+#: Spaces at most this big are searched exhaustively.
+EXHAUSTIVE_THRESHOLD = 1024
+
+
+def tune(workload: Workload | str, problem: int | None = None,
+         objective: str = "cycles", cfg: ClusterConfig = SNITCH_CLUSTER,
+         cluster: bool = False, power_cap_mw: float | None = None,
+         space: SearchSpace | None = None,
+         cache: "_cache.TuneCache | None | bool" = None,
+         measure_top_k: int = 0) -> TuneResult:
+    """Find the best plan for ``workload`` under ``objective``.
+
+    ``cache=None`` uses the shared persistent cache (``tune.cache``);
+    ``cache=False`` disables caching; a ``TuneCache`` instance targets a
+    specific file.  ``measure_top_k > 0`` wall-times the analytic top-K as
+    real kernels and re-ranks by measured time.
+    """
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    space = space or default_space(w, cfg, cluster=cluster)
+    problem = problem or w.default_problem
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}")
+
+    store = None if cache is False else (
+        _cache.default_cache() if cache in (None, True) else cache)
+    key = _cache.cache_key(w.name, problem, cfg, objective, power_cap_mw,
+                           space, measure_top_k=measure_top_k) \
+        if store is not None else None
+    if store is not None:
+        hit = store.get(key)
+        if hit is not None:
+            return TuneResult.from_dict(hit, from_cache=True)
+
+    default_ev = Evaluated(space.default,
+                           evaluate(w, space.default, problem, cfg,
+                                    power_cap_mw))
+    if space.size <= EXHAUSTIVE_THRESHOLD:
+        method = "exhaustive"
+        best, evaluated = exhaustive_search(w, space, problem, cfg,
+                                            objective, power_cap_mw)
+    else:
+        method = "halving+local"
+        best, evaluated = successive_halving(w, space, problem, cfg,
+                                             objective, power_cap_mw)
+        best, seen = local_search(w, space, problem, cfg, objective,
+                                  power_cap_mw, start=best.candidate)
+        evaluated += seen
+    # Tuned may equal, but never lose to, the static plan.
+    best = _best([best, default_ev], objective)
+
+    measured: dict[str, float] = {}
+    if measure_top_k > 0:
+        # Re-rank only what the search already priced at full fidelity —
+        # measurement refines the search, it must not reopen the space.
+        ranked = sorted({e.candidate: e for e in evaluated}.values(),
+                        key=lambda e: (objective_value(e.cost, objective),
+                                       e.candidate.sort_key()))
+        timed = measure_candidates(w, [e.candidate
+                                       for e in ranked[:measure_top_k]],
+                                   problem)
+        measured = {repr(c): us for c, us in timed.items()}
+        if timed and max(timed.values()) > 1.05 * min(timed.values()):
+            # Trust the hardware only when it actually distinguishes the
+            # candidates; within-noise spreads keep the analytic winner.
+            winner = min(timed, key=lambda c: (timed[c], c.sort_key()))
+            best = Evaluated(winner, evaluate(w, winner, problem, cfg,
+                                              power_cap_mw))
+
+    res = TuneResult(
+        workload=w.name, problem=problem, objective=objective,
+        best=best.candidate, best_cost=best.cost,
+        default=default_ev.candidate, default_cost=default_ev.cost,
+        method=method, n_evaluated=len(evaluated), measured_us=measured)
+    if store is not None:
+        store.put(key, res.to_dict())
+    return res
+
+
+def select_block(workload: Workload | str, objective: str = "cycles",
+                 problem: int | None = None,
+                 cfg: ClusterConfig = SNITCH_CLUSTER,
+                 cache: "_cache.TuneCache | None | bool" = None
+                 ) -> TuneResult:
+    """Block-size-only search: every other plan knob held at its static
+    default.  This is what consumers that can only act on the block
+    dimension (``copift.make_plan(tune=True)``, the ``repro.kernels``
+    tiling defaults) must use — a block lifted out of a *joint* argmin is
+    only optimal together with the fusion/pipelining choices it was found
+    with."""
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    space = default_space(w, cfg)
+    for name in ("fuse_fp", "movers", "pipelined"):
+        space = space.with_values(name, (getattr(space.default, name),))
+    return tune(w, problem=problem, objective=objective, cfg=cfg,
+                space=space, cache=cache)
+
+
+def select_operating_point(workload: Workload | str,
+                           cfg: ClusterConfig = SNITCH_CLUSTER,
+                           n_cores: int | None = None,
+                           power_cap_mw: float | None = None,
+                           objective: str = "energy",
+                           cache: "_cache.TuneCache | None | bool" = None
+                           ) -> TuneResult:
+    """Cluster operating-point selection: hold the plan knobs at their
+    static defaults and search cores x DVFS ladder only — the tuner-backed
+    replacement for ``dvfs.optimal_point`` used by the sweeps."""
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    n_cores = cfg.n_cores if n_cores is None else n_cores
+    space = default_space(w, cfg, cluster=True, cores=(n_cores,))
+    for name in ("block", "fuse_fp", "movers", "pipelined"):
+        space = space.with_values(name, (getattr(space.default, name),))
+    return tune(w, objective=objective, cfg=cfg,
+                power_cap_mw=power_cap_mw, space=space, cache=cache)
