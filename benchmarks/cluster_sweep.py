@@ -14,6 +14,10 @@ CLI:
     PYTHONPATH=src python benchmarks/cluster_sweep.py --n-cores 1
     PYTHONPATH=src python benchmarks/cluster_sweep.py --n-cores 8 \
         --json sweep.json                                           # JSON
+    PYTHONPATH=src python benchmarks/cluster_sweep.py \
+        --heterogeneous 2@1.45GHz@1.00V,6@0.50GHz@0.60V   # DVFS islands
+    PYTHONPATH=src python benchmarks/cluster_sweep.py --tuned \
+        --heterogeneous --power-cap-mw 250         # het operating points
 """
 
 from __future__ import annotations
@@ -22,11 +26,16 @@ import argparse
 import json
 import sys
 
-from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, evaluate_cluster,
-                           headline)
+from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, STRATEGIES,
+                           evaluate_cluster, evaluate_cluster_het, headline,
+                           parse_islands)
 from repro.core.kernels_isa import KERNELS
 
 DEFAULT_CORES = (1, 2, 4, 8, 16)
+
+#: The default big.LITTLE layout for ``--heterogeneous`` without a spec:
+#: two fast cores, six slow ones, on the 8-core Snitch cluster.
+DEFAULT_ISLAND_SPEC = "2@1.45GHz@1.00V,6@0.50GHz@0.60V"
 
 
 def sweep_rows(cores=DEFAULT_CORES, points=None, kernels=None,
@@ -87,8 +96,38 @@ def sweep_json(cores=DEFAULT_CORES, blocks_per_core: int = 1) -> dict:
         aggregates=aggregate_rows(cores, blocks_per_core=blocks_per_core))
 
 
+def het_rows(island_spec: str = DEFAULT_ISLAND_SPEC,
+             strategies=STRATEGIES, kernels=None,
+             blocks_per_core: int = 1) -> list[dict]:
+    """Heterogeneous sweep (``--heterogeneous``): one row per (kernel x
+    scheduling strategy) on the island layout, with the homogeneous
+    nominal cluster of the same core count as the reference column."""
+    islands = parse_islands(island_spec, SNITCH_CLUSTER)
+    cfg = SNITCH_CLUSTER.with_islands(*islands)
+    kernels = kernels if kernels is not None else list(KERNELS)
+    rows = []
+    for k in kernels:
+        hom = evaluate_cluster(k, SNITCH_CLUSTER.with_cores(cfg.n_cores),
+                               cfg.n_cores, blocks_per_core=blocks_per_core)
+        for s in strategies:
+            r = evaluate_cluster_het(k, cfg, s,
+                                     blocks_per_core=blocks_per_core)
+            rows.append(dict(
+                kernel=k, strategy=s, islands=island_spec,
+                n_cores=cfg.n_cores,
+                blocks_per_core=tuple(r.blocks_per_core),
+                time_us=r.time_us, imbalance=r.imbalance,
+                speedup=r.speedup, power_mw=r.power_copift_mw,
+                energy_pj_per_elem=r.energy_pj_per_elem,
+                time_vs_hom_nominal=r.time_us / hom.time_us,
+                energy_vs_hom_nominal=(r.energy_pj_per_elem
+                                       / hom.energy_pj_per_elem)))
+    return rows
+
+
 def tuned_rows(cores=(8,), power_cap_mw: float | None = None,
-               objective: str = "energy") -> list[dict]:
+               objective: str = "energy",
+               heterogeneous: bool = False) -> list[dict]:
     """Tuner-backed operating-point selection (``--tuned``): for each
     built-in tunable workload, hold the plan knobs at the paper defaults
     and let ``repro.tune`` pick the DVFS point under the power cap —
@@ -100,9 +139,12 @@ def tuned_rows(cores=(8,), power_cap_mw: float | None = None,
         for k in BUILTIN_KERNELS:
             res = select_operating_point(k, SNITCH_CLUSTER, n,
                                          power_cap_mw=power_cap_mw,
-                                         objective=objective)
+                                         objective=objective,
+                                         heterogeneous=heterogeneous)
             rows.append(dict(
                 kernel=k, n_cores=n, point=res.best.point,
+                islands=list(res.best.islands),
+                strategy=res.best.strategy,
                 objective=objective, power_cap_mw=power_cap_mw,
                 power_mw=res.best_cost.power_mw,
                 energy_pj_per_elem=res.best_cost.energy_pj / res.problem,
@@ -155,7 +197,29 @@ def main(argv=None) -> None:
                          "instead of the raw sweep")
     ap.add_argument("--power-cap-mw", type=float, default=None,
                     help="cluster power cap for --tuned (mW)")
+    ap.add_argument("--heterogeneous", nargs="?", const="auto",
+                    default=None, metavar="SPEC",
+                    help="DVFS-island sweep: per-strategy rows on the "
+                         "island layout '<count>@<point>,...' (default "
+                         f"'{DEFAULT_ISLAND_SPEC}'); with --tuned, search "
+                         "the heterogeneous operating-point space instead "
+                         "(the tuner picks layouts itself, so --tuned "
+                         "rejects an explicit SPEC)")
     args = ap.parse_args(argv)
+    if args.tuned and args.heterogeneous not in (None, "auto"):
+        ap.error("--tuned searches island layouts itself and cannot pin "
+                 f"the spec {args.heterogeneous!r}; drop the spec (plain "
+                 "--heterogeneous) or drop --tuned for the fixed-layout "
+                 "sweep")
+    if args.heterogeneous and not args.tuned:
+        if args.n_cores:
+            ap.error("--n-cores conflicts with the fixed-layout "
+                     "--heterogeneous sweep: the island spec "
+                     "'<count>@<point>,...' already fixes the core count")
+        if args.power_cap_mw is not None:
+            ap.error("--power-cap-mw only applies to --tuned; the "
+                     "fixed-layout --heterogeneous sweep reports "
+                     "uncapped power")
     if args.blocks_per_core < 1:
         ap.error(f"--blocks-per-core must be >= 1, got {args.blocks_per_core}")
     cores = DEFAULT_CORES
@@ -168,8 +232,37 @@ def main(argv=None) -> None:
         if any(c < 1 for c in cores):
             ap.error(f"--n-cores entries must be >= 1, got {args.n_cores!r}")
 
+    if args.heterogeneous and not args.tuned:
+        spec = (DEFAULT_ISLAND_SPEC if args.heterogeneous == "auto"
+                else args.heterogeneous)
+        try:
+            rows = het_rows(spec, blocks_per_core=args.blocks_per_core)
+        except ValueError as e:
+            ap.error(str(e))
+        if args.json:
+            doc = dict(islands=spec, rows=rows)
+            if args.json == "-":
+                json.dump(doc, sys.stdout, indent=1)
+                print()
+            else:
+                with open(args.json, "w") as f:
+                    json.dump(doc, f, indent=1)
+                print(f"wrote {args.json}: {len(rows)} rows")
+            return
+        print("cluster.het,strategy,blocks,time_us,imbalance,power_mw,"
+              "energy_pj_per_elem,time_vs_hom,energy_vs_hom")
+        for r in rows:
+            blocks = "/".join(str(b) for b in r["blocks_per_core"])
+            print(f"cluster.het.{r['kernel']},{r['strategy']},{blocks},"
+                  f"{r['time_us']:.2f},{r['imbalance']:.3f},"
+                  f"{r['power_mw']:.1f},{r['energy_pj_per_elem']:.1f},"
+                  f"{r['time_vs_hom_nominal']:.3f},"
+                  f"{r['energy_vs_hom_nominal']:.3f}")
+        return
+
     if args.tuned:
-        rows = tuned_rows(cores=cores, power_cap_mw=args.power_cap_mw)
+        rows = tuned_rows(cores=cores, power_cap_mw=args.power_cap_mw,
+                          heterogeneous=bool(args.heterogeneous))
         if args.json:
             doc = dict(power_cap_mw=args.power_cap_mw, rows=rows)
             if args.json == "-":
@@ -180,10 +273,12 @@ def main(argv=None) -> None:
                     json.dump(doc, f, indent=1)
                 print(f"wrote {args.json}: {len(rows)} rows")
             return
-        print("cluster.tuned,n_cores,point,power_mw,energy_pj_per_elem,"
-              "saving_vs_nominal")
+        print("cluster.tuned,n_cores,point,islands,strategy,power_mw,"
+              "energy_pj_per_elem,saving_vs_nominal")
         for r in rows:
+            islands = "+".join(r["islands"]) or "homogeneous"
             print(f"cluster.tuned.{r['kernel']},{r['n_cores']},{r['point']},"
+                  f"{islands},{r['strategy']},"
                   f"{r['power_mw']:.1f},{r['energy_pj_per_elem']:.2f},"
                   f"{r['saving_vs_nominal']:.3f}")
         return

@@ -18,6 +18,12 @@ section provides them (``fig2`` rows/aggregates, the full ``tune`` report
 with tuned-vs-default speedup per kernel) — the input for perf-trajectory
 tracking across commits.  ``--sections`` restricts the run (e.g. the CI
 smoke runs ``table1,fig2,tune``).
+
+``--diff A.json B.json`` compares two such snapshots instead of running
+anything: every numeric field of every CSV line is matched across the two
+files (by the line's non-numeric key columns) and relative deltas beyond
+``--threshold`` are reported, along with lines that appeared or vanished —
+the perf-trajectory view over the ``BENCH_*.json`` artifacts CI uploads.
 """
 
 from __future__ import annotations
@@ -61,6 +67,126 @@ def _structured(name: str):
     return None
 
 
+# ---------------------------------------------------------------------------
+# Snapshot diffing (perf trajectory over BENCH_*.json artifacts)
+# ---------------------------------------------------------------------------
+
+def _line_fields(line: str) -> tuple[tuple[str, ...], list[tuple[int, float]]]:
+    """Split a CSV line into its identity (the non-numeric columns) and its
+    numeric fields as (column index, value) pairs."""
+    key: list[str] = []
+    values: list[tuple[int, float]] = []
+    for i, tok in enumerate(line.split(",")):
+        try:
+            values.append((i, float(tok)))
+        except ValueError:
+            key.append(tok)
+    return tuple(key), values
+
+
+def _index_lines(snapshot: dict) -> dict:
+    """Map (section, line key, occurrence) -> numeric fields for every CSV
+    line of a snapshot.  The occurrence counter disambiguates repeated keys
+    (e.g. sweep rows differing only in numeric columns)."""
+    out: dict = {}
+    seen: dict = {}
+    for section, entry in snapshot.get("sections", {}).items():
+        for line in entry.get("lines") or []:
+            key, values = _line_fields(line)
+            occ = seen.get((section, key), 0)
+            seen[(section, key)] = occ + 1
+            out[(section, key, occ)] = values
+    return out
+
+
+def diff_snapshots(a: dict, b: dict, threshold: float = 0.02) -> dict:
+    """Compare two ``BENCH_*.json`` snapshots (A = old, B = new).
+
+    Returns ``changed`` rows (any numeric field moving more than
+    ``threshold`` relative — or appearing/disappearing within a line),
+    plus the line keys only one side has.  Zero-to-zero fields never
+    count as changed; a zero baseline with a nonzero new value reports
+    an infinite relative delta.
+
+    Repeated keys (lines whose non-numeric columns coincide, e.g. sweep
+    rows differing only in core count) match positionally — but only when
+    both snapshots carry the *same number* of such rows.  When the counts
+    differ the sweep's shape changed and positional pairing would compare
+    unrelated rows, so the whole key group is reported under
+    ``shape_changed`` instead of producing bogus per-field deltas.
+    """
+    ia, ib = _index_lines(a), _index_lines(b)
+
+    def _group_counts(index):
+        counts: dict = {}
+        for s, k, _ in index:
+            counts[(s, k)] = counts.get((s, k), 0) + 1
+        return counts
+
+    ga, gb = _group_counts(ia), _group_counts(ib)
+    shape_changed = {g for g in set(ga) & set(gb) if ga[g] != gb[g]}
+    changed = []
+    compared = 0
+    for key in sorted(set(ia) & set(ib)):
+        if (key[0], key[1]) in shape_changed:
+            continue
+        compared += 1
+        va, vb = dict(ia[key]), dict(ib[key])
+        for col in sorted(set(va) | set(vb)):
+            if col not in va or col not in vb:
+                changed.append(dict(section=key[0], key=",".join(key[1]),
+                                    occurrence=key[2], column=col,
+                                    a=va.get(col), b=vb.get(col),
+                                    rel_delta=float("inf")))
+                continue
+            x, y = va[col], vb[col]
+            if x == y:
+                continue
+            rel = abs(y - x) / abs(x) if x else float("inf")
+            if rel > threshold:
+                changed.append(dict(section=key[0], key=",".join(key[1]),
+                                    occurrence=key[2], column=col,
+                                    a=x, b=y, rel_delta=rel))
+    return dict(
+        threshold=threshold,
+        changed=changed,
+        shape_changed=sorted(f"{s}:{','.join(k)}" for s, k in shape_changed),
+        only_in_a=sorted(f"{s}:{','.join(k)}" for s, k in set(ga) - set(gb)),
+        only_in_b=sorted(f"{s}:{','.join(k)}" for s, k in set(gb) - set(ga)),
+        n_compared=compared)
+
+
+def format_diff(doc: dict) -> list[str]:
+    """Human-readable CSV-ish rendering of a ``diff_snapshots`` result."""
+    lines = [f"diff.compared,{doc['n_compared']},threshold="
+             f"{doc['threshold']}"]
+    for row in doc["changed"]:
+        # b=None: the field vanished from the new snapshot (a removal,
+        # not an increase); a=None: the field is new.
+        if row["b"] is None:
+            direction = "-"
+        elif row["a"] is None or row["b"] > row["a"]:
+            direction = "+"
+        else:
+            direction = "-"
+        rel = ("inf" if row["rel_delta"] == float("inf")
+               else f"{row['rel_delta'] * 100:.1f}%")
+        lines.append(f"diff.changed,{row['section']},{row['key']},"
+                     f"col{row['column']},{row['a']},{row['b']},"
+                     f"{direction}{rel}")
+    for k in doc.get("shape_changed", []):
+        lines.append(f"diff.shape_changed,{k}")
+    for k in doc["only_in_a"]:
+        lines.append(f"diff.removed,{k}")
+    for k in doc["only_in_b"]:
+        lines.append(f"diff.added,{k}")
+    if not doc["changed"] and not doc["only_in_a"] and not doc["only_in_b"] \
+            and not doc.get("shape_changed"):
+        lines.append("diff.identical,no numeric field moved beyond the "
+                     "threshold")
+    return lines
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -69,7 +195,28 @@ def main(argv=None) -> None:
     ap.add_argument("--sections", type=str, default=None,
                     help="comma-separated subset to run "
                          "(default: everything)")
+    ap.add_argument("--diff", nargs=2, metavar=("A.json", "B.json"),
+                    default=None,
+                    help="compare two BENCH_*.json snapshots (old, new) "
+                         "instead of running the benchmarks")
+    ap.add_argument("--threshold", type=float, default=0.02,
+                    help="relative delta below which --diff stays quiet "
+                         "(default 0.02)")
     args = ap.parse_args(argv)
+
+    if args.diff:
+        if args.threshold < 0:
+            ap.error(f"--threshold must be >= 0, got {args.threshold}")
+        try:
+            with open(args.diff[0]) as f:
+                a = json.load(f)
+            with open(args.diff[1]) as f:
+                b = json.load(f)
+        except (OSError, ValueError) as e:
+            ap.error(f"cannot read snapshot: {e}")
+        for line in format_diff(diff_snapshots(a, b, args.threshold)):
+            print(line)
+        return
 
     sections = _sections()
     if args.sections:

@@ -9,43 +9,58 @@ Layer map (mirrors ``repro.core``'s):
   ``core.timing``'s ``extra_contention`` hook
 * ``dma``         — double-buffered cluster L1 refill overlapped against
   compute (``max(compute, transfer)``, never the sum)
-* ``scheduler``   — static block-cyclic work partitioning + imbalance
+* ``scheduler``   — static work partitioning: homogeneous block-cyclic plus
+  the weighted ``assign`` strategies (static-proportional, LPT) for
+  heterogeneous cores
 * ``dvfs``        — operating-point power scaling (dyn ∝ f·V², leak ∝ V²)
   and the energy-optimal-point search under a cluster power cap
 * ``analytics``   — ``evaluate_cluster`` composition, strong/weak scaling
-  curves, cluster roofline, fig2-style aggregates
+  curves, cluster roofline, fig2-style aggregates, and
+  ``evaluate_cluster_het`` for DVFS-island (big.LITTLE-style) clusters
 
 Invariant (pinned in ``tests/test_cluster.py``): at one core, nominal DVFS
 and zero contention the cluster results equal the single-PE
 ``core.timing.evaluate_kernel`` / ``core.energy`` numbers bit-for-bit.
+The heterogeneous path extends it (``tests/test_het_cluster.py``): with
+identical per-core points every scheduling strategy and the island cost
+path reproduce the homogeneous numbers bit-for-bit.
 """
 
-from repro.cluster.analytics import (ClusterKernelResult, RooflinePoint,
-                                     cluster_roofline, evaluate_cluster,
-                                     headline, scaling_efficiency,
-                                     strong_scaling, weak_scaling)
+from repro.cluster.analytics import (ClusterKernelResult, HetClusterResult,
+                                     RooflinePoint, cluster_roofline,
+                                     compare_strategies, evaluate_cluster,
+                                     evaluate_cluster_het, headline,
+                                     scaling_efficiency, strong_scaling,
+                                     weak_scaling)
 from repro.cluster.contention import (AccessProfile, baseline_profile,
                                       baseline_extra_contention,
-                                      copift_extra_contention, copift_profile)
+                                      baseline_extra_contention_het,
+                                      copift_extra_contention,
+                                      copift_extra_contention_het,
+                                      copift_profile)
 from repro.cluster.dma import (BYTES_PER_ELEM, DmaTiming, cluster_dma_timing,
                                kernel_bytes, transfer_cycles)
 from repro.cluster.dvfs import (DvfsPointResult, cluster_power_mw,
-                                core_power_mw, optimal_point, scale_breakdown,
-                                sweep_points)
-from repro.cluster.scheduler import (WorkAssignment, block_cyclic,
-                                     cluster_compute_cycles)
+                                core_power_mw, het_cluster_power_mw,
+                                optimal_point, scale_breakdown, sweep_points)
+from repro.cluster.scheduler import (STRATEGIES, WorkAssignment, assign,
+                                     block_cyclic, cluster_compute_cycles)
 from repro.cluster.topology import (NOMINAL_POINT, OPERATING_POINTS,
-                                    SNITCH_CLUSTER, ClusterConfig,
-                                    OperatingPoint)
+                                    SNITCH_CLUSTER, ClusterConfig, DvfsIsland,
+                                    OperatingPoint, parse_islands)
 
 __all__ = [
-    "ClusterKernelResult", "RooflinePoint", "cluster_roofline",
-    "evaluate_cluster", "headline", "scaling_efficiency", "strong_scaling",
-    "weak_scaling", "AccessProfile", "baseline_profile",
-    "baseline_extra_contention", "copift_extra_contention", "copift_profile",
-    "BYTES_PER_ELEM", "DmaTiming", "cluster_dma_timing", "kernel_bytes",
-    "transfer_cycles", "DvfsPointResult", "cluster_power_mw", "core_power_mw",
-    "optimal_point", "scale_breakdown", "sweep_points", "WorkAssignment",
-    "block_cyclic", "cluster_compute_cycles", "NOMINAL_POINT",
-    "OPERATING_POINTS", "SNITCH_CLUSTER", "ClusterConfig", "OperatingPoint",
+    "ClusterKernelResult", "HetClusterResult", "RooflinePoint",
+    "cluster_roofline", "compare_strategies", "evaluate_cluster",
+    "evaluate_cluster_het", "headline", "scaling_efficiency",
+    "strong_scaling", "weak_scaling", "AccessProfile", "baseline_profile",
+    "baseline_extra_contention", "baseline_extra_contention_het",
+    "copift_extra_contention", "copift_extra_contention_het",
+    "copift_profile", "BYTES_PER_ELEM", "DmaTiming", "cluster_dma_timing",
+    "kernel_bytes", "transfer_cycles", "DvfsPointResult", "cluster_power_mw",
+    "core_power_mw", "het_cluster_power_mw", "optimal_point",
+    "scale_breakdown", "sweep_points", "STRATEGIES", "WorkAssignment",
+    "assign", "block_cyclic", "cluster_compute_cycles", "NOMINAL_POINT",
+    "OPERATING_POINTS", "SNITCH_CLUSTER", "ClusterConfig", "DvfsIsland",
+    "OperatingPoint", "parse_islands",
 ]

@@ -26,7 +26,8 @@ from functools import lru_cache
 from repro.cluster import contention as _contention
 from repro.cluster import dma as _dma
 from repro.cluster import dvfs as _dvfs
-from repro.cluster.scheduler import block_cyclic, cluster_compute_cycles
+from repro.cluster.scheduler import (STRATEGIES, assign, block_cyclic,
+                                     cluster_compute_cycles)
 from repro.cluster.topology import (NOMINAL_POINT, ClusterConfig,
                                     OperatingPoint, SNITCH_CLUSTER)
 from repro.core.analytics import TABLE_I, geomean
@@ -158,6 +159,173 @@ def evaluate_cluster(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
                                              copift=False),
         power_copift_mw=_dvfs.cluster_power_mw(cfg, name, n_active, point,
                                                copift=True))
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous clusters (DVFS islands)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HetClusterResult:
+    """One kernel evaluated on a cluster whose cores may sit at different
+    operating points (DVFS islands).
+
+    Cycle counts are expressed in *reference-clock cycles* — cycles of the
+    fastest core's domain, with slower cores' work scaled by the frequency
+    ratio.  When every core shares one point the ratio is exactly 1.0, so
+    each figure equals the homogeneous ``ClusterKernelResult``'s bit-for-bit
+    (the reduction invariant, pinned in ``tests/test_het_cluster.py``).
+    """
+    name: str
+    strategy: str
+    core_points: tuple[OperatingPoint, ...]
+    block: int
+    total_blocks: int
+    total_elems: int
+    blocks_per_core: tuple[int, ...]
+    ref_freq_ghz: float           # the fastest domain (uncore/DMA clock)
+    # reference-clock cycle counts (floats: slower cores scale by f_ref/f_i)
+    cycles_base: float
+    cycles_copift: float
+    instrs_base: int
+    instrs_copift: int
+    # model diagnostics
+    extra_contention: float       # worst per-core stalls/access surcharge
+    imbalance: float              # weighted makespan over fluid optimum
+    dma_bound: bool
+    dma_utilization: float
+    # power of the active cores at their own points (mW, whole cluster)
+    power_base_mw: float
+    power_copift_mw: float
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.core_points)
+
+    @property
+    def speedup(self) -> float:
+        return self.cycles_base / self.cycles_copift
+
+    @property
+    def ipc_base(self) -> float:
+        return self.instrs_base / self.cycles_base
+
+    @property
+    def ipc_copift(self) -> float:
+        """Cluster-aggregate IPC in reference-clock cycles."""
+        return self.instrs_copift / self.cycles_copift
+
+    @property
+    def power_ratio(self) -> float:
+        return self.power_copift_mw / self.power_base_mw
+
+    @property
+    def energy_saving(self) -> float:
+        return self.speedup / self.power_ratio
+
+    @property
+    def time_us(self) -> float:
+        return self.cycles_copift / self.ref_freq_ghz * 1e-3
+
+    @property
+    def cycles_per_elem(self) -> float:
+        return self.cycles_copift / self.total_elems
+
+    @property
+    def energy_pj_per_elem(self) -> float:
+        t_ns = self.cycles_per_elem / self.ref_freq_ghz
+        return self.power_copift_mw * t_ns
+
+
+def _het_compute_cycles(timing_fn, name: str, block: int,
+                        extras: tuple[float, ...],
+                        blocks: tuple[int, ...],
+                        speeds: tuple[float, ...],
+                        f_ref: float) -> tuple[float, int]:
+    """Reference-clock compute latency over the active cores, plus one
+    block's instruction count.  ``extras``/``blocks``/``speeds`` are
+    parallel over the *active* cores only."""
+    latest = 0.0
+    instrs = 0
+    for extra, b, f in zip(extras, blocks, speeds):
+        bt = timing_fn(name, block, extra)
+        instrs = bt.instrs
+        latest = max(latest, (bt.cycles * b) * (f_ref / f))
+    return latest, instrs
+
+
+def evaluate_cluster_het(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
+                         strategy: str = "lpt",
+                         point: OperatingPoint = NOMINAL_POINT,
+                         blocks_per_core: int = 1,
+                         total_blocks: int | None = None) -> HetClusterResult:
+    """Evaluate one kernel on a (possibly) heterogeneous cluster.
+
+    Per-core operating points come from ``cfg.islands``; a config without
+    islands runs every core at ``point`` (and then this function reproduces
+    ``evaluate_cluster`` exactly, for every strategy).  Work is split by
+    ``strategy`` (see ``cluster.scheduler.assign``) with core speeds taken
+    as the island frequencies.
+    """
+    core_points = cfg.core_points(point)
+    speeds = tuple(p.freq_ghz for p in core_points)
+    f_ref = max(speeds)
+    row = TABLE_I[name]
+    block = row.max_block
+    if total_blocks is None:
+        total_blocks = blocks_per_core * cfg.n_cores
+    if total_blocks < 1:
+        raise ValueError(f"need at least one block of work, got "
+                         f"{total_blocks} (blocks_per_core={blocks_per_core})")
+    assignment = assign(total_blocks, speeds, strategy)
+
+    active = tuple(i for i, b in enumerate(assignment.blocks_per_core) if b)
+    act_speeds = tuple(speeds[i] for i in active)
+    act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
+    act_points = tuple(core_points[i] for i in active)
+    extras_c = _contention.copift_extra_contention_het(cfg, name, act_speeds)
+    extras_b = _contention.baseline_extra_contention_het(cfg, name,
+                                                         act_speeds)
+
+    compute_c, instrs_c = _het_compute_cycles(_copift_timing, name, block,
+                                              extras_c, act_blocks,
+                                              act_speeds, f_ref)
+    compute_b, instrs_b = _het_compute_cycles(_baseline_timing, name, block,
+                                              extras_b, act_blocks,
+                                              act_speeds, f_ref)
+    total_elems = block * total_blocks
+    transfer = _dma.transfer_cycles(cfg, _dma.kernel_bytes(name, total_elems))
+    cycles_c = max(compute_c, transfer)
+    cycles_b = max(compute_b, transfer)
+
+    return HetClusterResult(
+        name=name, strategy=strategy, core_points=core_points, block=block,
+        total_blocks=total_blocks, total_elems=total_elems,
+        blocks_per_core=assignment.blocks_per_core, ref_freq_ghz=f_ref,
+        cycles_base=cycles_b, cycles_copift=cycles_c,
+        instrs_base=instrs_b * total_blocks,
+        instrs_copift=instrs_c * total_blocks,
+        extra_contention=max(extras_c),
+        imbalance=assignment.weighted_imbalance,
+        dma_bound=transfer > compute_c,
+        dma_utilization=(transfer / cycles_c if cycles_c else 0.0),
+        power_base_mw=_dvfs.het_cluster_power_mw(cfg, name, act_points,
+                                                 copift=False),
+        power_copift_mw=_dvfs.het_cluster_power_mw(cfg, name, act_points,
+                                                   copift=True))
+
+
+def compare_strategies(name: str, cfg: ClusterConfig,
+                       strategies: tuple[str, ...] = STRATEGIES,
+                       blocks_per_core: int = 1,
+                       total_blocks: int | None = None
+                       ) -> dict[str, HetClusterResult]:
+    """Evaluate every scheduling strategy on the same heterogeneous cluster
+    — how much of the speed-blind block-cyclic tail each one recovers."""
+    return {s: evaluate_cluster_het(name, cfg, s,
+                                    blocks_per_core=blocks_per_core,
+                                    total_blocks=total_blocks)
+            for s in strategies}
 
 
 # ---------------------------------------------------------------------------

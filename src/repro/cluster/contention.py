@@ -59,6 +59,28 @@ class AccessProfile:
             * self.pattern / cfg.tcdm_banks
         return min(extra, MAX_EXTRA_STALLS)
 
+    def extra_stalls_het(self, cfg: ClusterConfig,
+                         core_speeds: tuple[float, ...],
+                         core_idx: int) -> float:
+        """Inter-core stall surcharge per access *seen by core ``core_idx``*
+        when the active cores run at different clock rates.
+
+        A faster neighbor lands proportionally more requests per victim-core
+        cycle, so the homogeneous ``(n-1)`` other-core count generalizes to
+        ``Σ_{j≠i} f_j / f_i`` (the pressure in units of the victim's own
+        cycles).  With uniform speeds every ratio is exactly 1.0 and the
+        pressure sum is exactly ``n-1`` — same float expression, bit-for-bit
+        the homogeneous surcharge (the reduction invariant).
+        """
+        if len(core_speeds) <= 1:
+            return 0.0
+        f_i = core_speeds[core_idx]
+        pressure = sum(f_j / f_i
+                       for j, f_j in enumerate(core_speeds) if j != core_idx)
+        extra = 0.5 * pressure * self.requests_per_cycle \
+            * self.pattern / cfg.tcdm_banks
+        return min(extra, MAX_EXTRA_STALLS)
+
 
 @lru_cache(maxsize=None)
 def copift_profile(name: str) -> AccessProfile:
@@ -98,3 +120,24 @@ def baseline_extra_contention(cfg: ClusterConfig, name: str,
                               n_active: int) -> float:
     """Stalls/access for ``n_active`` concurrent baseline PEs."""
     return baseline_profile(name).extra_stalls(cfg, n_active)
+
+
+def copift_extra_contention_het(cfg: ClusterConfig, name: str,
+                                core_speeds: tuple[float, ...]
+                                ) -> tuple[float, ...]:
+    """Per-core stalls/access for active COPIFT PEs at (possibly) different
+    clock rates — ``core_speeds`` lists only the *active* cores' relative
+    frequencies.  Uniform speeds reproduce the homogeneous surcharge
+    bit-for-bit for every core."""
+    prof = copift_profile(name)
+    return tuple(prof.extra_stalls_het(cfg, core_speeds, i)
+                 for i in range(len(core_speeds)))
+
+
+def baseline_extra_contention_het(cfg: ClusterConfig, name: str,
+                                  core_speeds: tuple[float, ...]
+                                  ) -> tuple[float, ...]:
+    """Per-core stalls/access for active baseline PEs at different rates."""
+    prof = baseline_profile(name)
+    return tuple(prof.extra_stalls_het(cfg, core_speeds, i)
+                 for i in range(len(core_speeds)))

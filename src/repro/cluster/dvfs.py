@@ -62,6 +62,23 @@ def cluster_power_mw(cfg: ClusterConfig, name: str, n_cores: int,
                                    nominal=cfg.nominal)
 
 
+def het_cluster_power_mw(cfg: ClusterConfig, name: str,
+                         core_points: tuple[OperatingPoint, ...],
+                         copift: bool = True) -> float:
+    """Cluster power when active cores sit at per-core operating points.
+
+    Cores are grouped by *distinct point* and each group is charged
+    ``count x per-core power`` — so a heterogeneous call where every core
+    shares one point computes the exact same ``n x p`` product as
+    ``cluster_power_mw`` (the bit-for-bit homogeneous reduction), rather
+    than a re-associated float sum."""
+    counts: dict[OperatingPoint, int] = {}
+    for p in core_points:
+        counts[p] = counts.get(p, 0) + 1
+    return sum(n * core_power_mw(name, p, copift=copift, nominal=cfg.nominal)
+               for p, n in counts.items())
+
+
 @dataclass(frozen=True)
 class DvfsPointResult:
     """One operating point evaluated for one (kernel, n_cores) workload."""

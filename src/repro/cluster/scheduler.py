@@ -1,31 +1,59 @@
-"""Static work partitioning — block-cyclic distribution of a kernel's
-blocks across the cluster's cores.
+"""Static work partitioning — distributing a kernel's blocks across the
+cluster's cores, homogeneous or heterogeneous.
 
 COPIFT tiles a kernel into ``n_blocks`` independent blocks (Step 4); across
-a cluster the natural static schedule hands block ``j`` to core
-``j mod n_cores``.  Blocks are homogeneous (same size, same instruction
-mix), so the only load imbalance is the remainder: some cores run
-``ceil(n_blocks / n_cores)`` rounds while others run ``floor``.  The cluster
-finishes with the slowest core — ``imbalance`` quantifies the idle fraction
-this costs, which the strong-scaling sweeps surface (e.g. 36 blocks on 16
-cores: 3 rounds on 4 cores, 2 on the rest → 2.25 mean vs 3 max).
+a homogeneous cluster the natural static schedule hands block ``j`` to core
+``j mod n_cores`` (``block_cyclic``).  Blocks are homogeneous (same size,
+same instruction mix), so on equal cores the only load imbalance is the
+remainder: some cores run ``ceil(n_blocks / n_cores)`` rounds while others
+run ``floor``.  The cluster finishes with the slowest core — ``imbalance``
+quantifies the idle fraction this costs, which the strong-scaling sweeps
+surface (e.g. 36 blocks on 16 cores: 3 rounds on 4 cores, 2 on the rest →
+2.25 mean vs 3 max).
+
+With DVFS islands the cores *differ in speed*, and block-cyclic is no
+longer the right static schedule: a 0.5 GHz core handed as many blocks as
+a 1.45 GHz one stretches the tail by ~3x.  ``assign`` generalizes the
+partitioner to weighted cores with three strategies:
+
+* ``block_cyclic``          — speed-blind round robin (the paper's rule);
+* ``static_proportional``   — shares ∝ core speed, largest-remainder
+  apportionment (deterministic, exact conservation);
+* ``lpt``                   — longest-processing-time greedy: each block
+  goes to the core that would finish it earliest (the classic 4/3-optimal
+  makespan heuristic, exact here because blocks are identical).
+
+Reduction invariant (pinned by the scheduler property tests): with uniform
+``core_speeds`` every strategy produces exactly ``block_cyclic``'s
+per-core counts, so the heterogeneous machinery is a strict superset of
+the homogeneous one.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
+#: The weighted-assignment strategies ``assign`` accepts.
+STRATEGIES = ("block_cyclic", "static_proportional", "lpt")
+
 
 @dataclass(frozen=True)
 class WorkAssignment:
-    """Block-cyclic assignment of ``n_blocks`` blocks to ``n_cores`` cores."""
+    """Assignment of ``n_blocks`` blocks to ``n_cores`` cores.
+
+    ``core_speeds`` (relative rates, e.g. island frequencies) is ``None``
+    for the homogeneous block-cyclic case — every derived quantity then
+    treats the cores as equal.
+    """
     n_blocks: int
     n_cores: int
     blocks_per_core: tuple[int, ...]
+    core_speeds: tuple[float, ...] | None = None
 
     @property
     def max_blocks(self) -> int:
-        """Rounds the slowest (fullest) core runs — sets cluster latency."""
+        """Rounds the fullest core runs — sets cluster latency on equal
+        cores."""
         return max(self.blocks_per_core)
 
     @property
@@ -34,8 +62,31 @@ class WorkAssignment:
 
     @property
     def imbalance(self) -> float:
-        """max/mean load ratio: 1.0 = perfectly balanced."""
+        """max/mean load ratio: 1.0 = perfectly balanced (unweighted)."""
         return self.max_blocks / self.mean_blocks if self.n_blocks else 1.0
+
+    @property
+    def finish_times(self) -> tuple[float, ...]:
+        """Per-core finish time in block-rounds of a unit-speed core:
+        ``blocks_i / speed_i`` (``blocks_i`` when speeds are uniform)."""
+        if self.core_speeds is None:
+            return tuple(float(b) for b in self.blocks_per_core)
+        return tuple(b / s for b, s in zip(self.blocks_per_core,
+                                           self.core_speeds))
+
+    @property
+    def makespan(self) -> float:
+        """The slowest core's finish time (weighted rounds)."""
+        return max(self.finish_times)
+
+    @property
+    def weighted_imbalance(self) -> float:
+        """makespan over the ideal fluid makespan ``n_blocks / Σspeed``:
+        1.0 = the heterogeneous cluster is perfectly speed-balanced."""
+        if not self.n_blocks:
+            return 1.0
+        speeds = self.core_speeds or (1.0,) * self.n_cores
+        return self.makespan / (self.n_blocks / sum(speeds))
 
     @property
     def idle_core_cycles_frac(self) -> float:
@@ -58,6 +109,68 @@ def block_cyclic(n_blocks: int, n_cores: int) -> WorkAssignment:
         for i in range(n_cores))
     return WorkAssignment(n_blocks=n_blocks, n_cores=n_cores,
                           blocks_per_core=per_core)
+
+
+def _static_proportional(n_blocks: int, speeds: tuple[float, ...]
+                         ) -> tuple[int, ...]:
+    """Largest-remainder apportionment of ``n_blocks`` over ``speeds``."""
+    total_speed = sum(speeds)
+    quotas = [n_blocks * s / total_speed for s in speeds]
+    base = [int(q) for q in quotas]
+    rema = [q - b for q, b in zip(quotas, base)]
+    # Conservation under float drift: hand out (or claw back) one block at
+    # a time by fractional remainder, lowest core index winning ties.
+    while sum(base) < n_blocks:
+        i = max(range(len(base)), key=lambda i: (rema[i], -i))
+        base[i] += 1
+        rema[i] -= 1.0
+    while sum(base) > n_blocks:
+        i = min(range(len(base)), key=lambda i: (rema[i], -i))
+        if base[i] == 0:
+            rema[i] += 1.0       # can't go negative; retry elsewhere
+            continue
+        base[i] -= 1
+        rema[i] += 1.0
+    return tuple(base)
+
+
+def _lpt(n_blocks: int, speeds: tuple[float, ...]) -> tuple[int, ...]:
+    """Greedy earliest-finish-time: identical blocks, so LPT degenerates to
+    repeatedly loading the core that would complete its next block first."""
+    counts = [0] * len(speeds)
+    for _ in range(n_blocks):
+        i = min(range(len(speeds)),
+                key=lambda i: ((counts[i] + 1) / speeds[i], i))
+        counts[i] += 1
+    return tuple(counts)
+
+
+def assign(n_blocks: int, core_speeds: tuple[float, ...] | list[float],
+           strategy: str = "block_cyclic") -> WorkAssignment:
+    """Distribute ``n_blocks`` identical blocks over cores of the given
+    relative ``core_speeds`` (island frequencies, typically).
+
+    ``block_cyclic`` ignores the speeds (the homogeneous rule, kept for
+    comparison); the weighted strategies match shares to speeds.  With
+    uniform speeds every strategy reduces exactly to ``block_cyclic``.
+    """
+    speeds = tuple(float(s) for s in core_speeds)
+    if n_blocks < 0 or not speeds:
+        raise ValueError(f"bad assignment: {n_blocks} blocks, "
+                         f"{len(speeds)} cores")
+    if any(s <= 0 for s in speeds):
+        raise ValueError(f"core speeds must be positive, got {speeds}")
+    if strategy == "block_cyclic":
+        per_core = block_cyclic(n_blocks, len(speeds)).blocks_per_core
+    elif strategy == "static_proportional":
+        per_core = _static_proportional(n_blocks, speeds)
+    elif strategy == "lpt":
+        per_core = _lpt(n_blocks, speeds)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"expected one of {STRATEGIES}")
+    return WorkAssignment(n_blocks=n_blocks, n_cores=len(speeds),
+                          blocks_per_core=per_core, core_speeds=speeds)
 
 
 def cluster_compute_cycles(per_block_cycles: int,

@@ -39,6 +39,22 @@ class OperatingPoint:
 #: The calibration point of ``core/energy.py`` (GF12LP+, 1 GHz, 0.8 V).
 NOMINAL_POINT = OperatingPoint("1.00GHz@0.80V", 1.00, 0.80)
 
+
+@dataclass(frozen=True)
+class DvfsIsland:
+    """A group of cores sharing one frequency/voltage domain.
+
+    Snitch-class clusters place cores in *islands*: all cores of an island
+    see the same (f, V) pair, and islands can differ (big.LITTLE-style).
+    A homogeneous cluster is the one-island special case.
+    """
+    n_cores: int
+    point: OperatingPoint
+
+    def __post_init__(self):
+        if self.n_cores < 1:
+            raise ValueError(f"island needs >= 1 core, got {self.n_cores}")
+
 #: Snitch-cluster DVFS ladder (GF12LP+ style signoff corners around the
 #: calibration point; low-voltage points trade frequency for energy).
 OPERATING_POINTS: tuple[OperatingPoint, ...] = (
@@ -58,6 +74,9 @@ class ClusterConfig:
                               single-cycle crossbar (conflicts serialize);
     ``dma_bytes_per_cycle``   cluster DMA engine width (512-bit = 64 B);
     ``operating_points``      the DVFS ladder available to ``dvfs.py``;
+    ``islands``               optional per-island DVFS domains; ``None``
+                              means homogeneous (every core at the point
+                              the evaluation is asked for);
     ``power_cap_mw``          cluster-level power budget for the
                               energy-optimal-point search (None = uncapped).
     """
@@ -66,6 +85,7 @@ class ClusterConfig:
     dma_bytes_per_cycle: float = 64.0
     operating_points: tuple[OperatingPoint, ...] = OPERATING_POINTS
     nominal: OperatingPoint = NOMINAL_POINT
+    islands: tuple[DvfsIsland, ...] | None = None
     power_cap_mw: float | None = None
 
     def __post_init__(self):
@@ -77,11 +97,64 @@ class ClusterConfig:
             raise ValueError("dma_bytes_per_cycle must be positive")
         if self.nominal not in self.operating_points:
             raise ValueError("nominal operating point must be in the ladder")
+        if self.islands is not None:
+            total = sum(i.n_cores for i in self.islands)
+            if total != self.n_cores:
+                raise ValueError(f"islands cover {total} cores, cluster has "
+                                 f"{self.n_cores}")
 
     def with_cores(self, n_cores: int) -> "ClusterConfig":
         """Same cluster, different core count (banks/DMA held fixed — the
-        resource-sharing effect the scaling sweeps measure)."""
-        return replace(self, n_cores=n_cores)
+        resource-sharing effect the scaling sweeps measure).  Any island
+        layout is dropped: it was sized for the old core count."""
+        return replace(self, n_cores=n_cores, islands=None)
+
+    def with_islands(self, *islands: DvfsIsland) -> "ClusterConfig":
+        """Same shared resources, cores regrouped into DVFS islands (the
+        core count follows the island sizes)."""
+        return replace(self, n_cores=sum(i.n_cores for i in islands),
+                       islands=tuple(islands))
+
+    def point(self, name: str) -> OperatingPoint:
+        """Ladder point by name (the ``Candidate.point`` string)."""
+        for p in self.operating_points:
+            if p.name == name:
+                return p
+        raise ValueError(f"operating point {name!r} not in the ladder: "
+                         f"{[p.name for p in self.operating_points]}")
+
+    def core_points(self, default: OperatingPoint | None = None
+                    ) -> tuple[OperatingPoint, ...]:
+        """One operating point per core: the island layout expanded, or
+        ``default`` (nominal if unset) replicated when homogeneous."""
+        if self.islands is None:
+            return (default or self.nominal,) * self.n_cores
+        out: list[OperatingPoint] = []
+        for isl in self.islands:
+            out.extend([isl.point] * isl.n_cores)
+        return tuple(out)
+
+    @property
+    def is_heterogeneous(self) -> bool:
+        """True iff the island layout mixes distinct operating points."""
+        return (self.islands is not None
+                and len({i.point for i in self.islands}) > 1)
+
+
+def parse_islands(spec: str, cfg: "ClusterConfig") -> tuple[DvfsIsland, ...]:
+    """Parse a CLI island spec ``"<count>@<point>,<count>@<point>,..."``
+    (e.g. ``"2@1.45GHz@1.00V,6@0.50GHz@0.60V"``) against ``cfg``'s ladder."""
+    islands = []
+    for part in spec.split(","):
+        part = part.strip()
+        count, _, point_name = part.partition("@")
+        try:
+            n = int(count)
+        except ValueError:
+            raise ValueError(f"bad island spec {part!r}: expected "
+                             f"'<count>@<point-name>'") from None
+        islands.append(DvfsIsland(n, cfg.point(point_name)))
+    return tuple(islands)
 
 
 #: The reference 8-core Snitch cluster.

@@ -64,7 +64,7 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
                  batch: int = 4, temperature: float = 0.0, seed: int = 0,
-                 autotune: bool = False):
+                 autotune: bool = False, power_cap_mw: float | None = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -72,6 +72,12 @@ class ServeEngine:
         self.temperature = temperature
         self.seed = seed
         self.autotune = autotune
+        self.power_cap_mw = power_cap_mw
+        self.operating_plan = None
+        if power_cap_mw is not None and not autotune:
+            raise ValueError("power_cap_mw only constrains the autotuned "
+                             "operating plan; pass autotune=True (or drop "
+                             "the cap)")
         if autotune:
             # Engine setup is where tuning pays: the softmax/PRNG kernels
             # run every decode step, so let repro.tune pick their tiling
@@ -80,6 +86,17 @@ class ServeEngine:
             # subsequent kernel calls; revert with
             # ``repro.kernels.enable_tuned_defaults(False)``.
             kops.enable_tuned_defaults(True)
+            # Also pick the cluster operating plan for the decode-hot
+            # kernels: the heterogeneous (DVFS-island) search, which never
+            # scores worse than the homogeneous ladder under the same
+            # power cap.  Advisory on this backend — `operating_plan` is
+            # what a Snitch-cluster deployment of the engine would pin.
+            from repro.tune import select_operating_point
+            self.operating_plan = {
+                name: select_operating_point(name,
+                                             power_cap_mw=power_cap_mw,
+                                             heterogeneous=True)
+                for name in ("softmax", "prng")}
         self._prefill = jax.jit(make_prefill(cfg))
         self._step = jax.jit(make_serve_step(cfg))
 

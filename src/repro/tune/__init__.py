@@ -13,7 +13,9 @@ Layer map (mirrors ``repro.core``'s and ``repro.cluster``'s):
 
 * ``space``     — ``Knob`` / ``SearchSpace`` / ``Candidate``: the searchable
   plan parameters (block size, FP-phase fusion, SSR/mover assignment,
-  pipelining on/off; at cluster scope cores x DVFS point under a power cap)
+  pipelining on/off; at cluster scope cores x DVFS point under a power
+  cap; at heterogeneous scope DVFS-island layouts and the weighted
+  scheduling strategy)
 * ``workloads`` — the tunable built-in kernels (``expf``, ``logf``,
   ``montecarlo``, ``prng``, ``softmax``) bound to their ISA-level schedules
 * ``cost``      — ``evaluate(workload, candidate) -> CostEstimate``: the
@@ -37,7 +39,8 @@ from repro.tune.search import (Evaluated, TuneResult, exhaustive_search,
                                local_search, measure_candidates,
                                select_block, select_operating_point,
                                successive_halving, tune)
-from repro.tune.space import Candidate, Knob, SearchSpace, default_space
+from repro.tune.space import (Candidate, Knob, SearchSpace, default_space,
+                              island_ladder)
 from repro.tune.workloads import (BUILTIN_KERNELS, WORKLOADS, Workload,
                                   get_workload)
 
@@ -47,6 +50,6 @@ __all__ = [
     "Evaluated", "TuneResult", "exhaustive_search", "local_search",
     "measure_candidates", "select_block", "select_operating_point",
     "successive_halving", "tune",
-    "Candidate", "Knob", "SearchSpace", "default_space",
+    "Candidate", "Knob", "SearchSpace", "default_space", "island_ladder",
     "BUILTIN_KERNELS", "WORKLOADS", "Workload", "get_workload",
 ]

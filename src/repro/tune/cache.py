@@ -10,8 +10,11 @@ entry simply misses, so stale results can't leak across configs.
 Location: ``$REPRO_TUNE_CACHE`` if set, else
 ``~/.cache/repro-tune/cache.json``.  Writes are atomic
 (write-temp-then-rename), so concurrent processes at worst lose an entry,
-never corrupt the file; unreadable or wrong-schema files are treated as
-empty rather than fatal.
+never corrupt the file; unreadable, truncated or wrong-schema files are
+treated as empty rather than fatal, and an unwritable location (e.g.
+``$REPRO_TUNE_CACHE`` pointing into a read-only mount) degrades the cache
+to in-memory-only with one warning instead of failing the ``tune()`` call
+— caching accelerates, it never gates.
 """
 
 from __future__ import annotations
@@ -20,6 +23,7 @@ import hashlib
 import json
 import os
 import tempfile
+import warnings
 
 from repro.cluster.topology import ClusterConfig
 from repro.tune.space import SearchSpace
@@ -65,6 +69,7 @@ class TuneCache:
     def __init__(self, path: str | os.PathLike | None = None):
         self.path = str(path) if path else _default_path()
         self._data: dict | None = None
+        self._memory_only = False     # set when the path proves unwritable
 
     def _load(self) -> dict:
         if self._data is None:
@@ -96,19 +101,32 @@ class TuneCache:
         self._flush()
 
     def _flush(self) -> None:
+        """Atomic write-temp-then-rename.  An unwritable location flips the
+        cache to memory-only (with one warning) instead of raising: entries
+        keep accumulating in-process, ``tune()`` keeps working, nothing
+        persists — caching accelerates, it never gates."""
+        if self._memory_only:
+            return
         d = os.path.dirname(self.path) or "."
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(prefix=".tune-cache-", dir=d)
+        tmp = None
         try:
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(prefix=".tune-cache-", dir=d)
             with os.fdopen(fd, "w") as f:
                 json.dump(self._data, f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        except BaseException as e:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            if not isinstance(e, OSError):
+                raise
+            self._memory_only = True
+            warnings.warn(f"tune cache at {self.path!r} is not writable "
+                          f"({e}); falling back to in-memory caching",
+                          RuntimeWarning, stacklevel=3)
 
 
 _DEFAULT_CACHE: TuneCache | None = None

@@ -19,6 +19,13 @@ One candidate is priced end-to-end through the calibrated machinery:
    component model re-expressed at the point (dyn ∝ f·V², leak ∝ V²); a
    cluster power cap marks candidates infeasible rather than silently
    clipping them.
+5. *DVFS islands* — a candidate with a non-empty ``islands`` layout is
+   priced through the heterogeneous path instead: cores expand to
+   per-core operating points, blocks are shared by the candidate's
+   ``strategy`` (``cluster.scheduler.assign``), each core pays its own
+   clock-rate-scaled contention surcharge, and power groups active cores
+   by distinct point.  A uniform layout reproduces the homogeneous path
+   bit-for-bit, so the heterogeneous space strictly contains this one.
 
 At the space's default candidate (Table-I block, no fusion, natural
 movers, pipelined, one core, nominal point) every term reduces to the
@@ -29,14 +36,14 @@ ground truth, as ``repro.cluster`` does.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from functools import lru_cache
 
 from repro.cluster.contention import (PATTERN_AFFINE, PATTERN_RANDOM,
                                       AccessProfile)
 from repro.cluster.dma import transfer_cycles
 from repro.cluster.dvfs import scale_breakdown
-from repro.cluster.scheduler import block_cyclic
+from repro.cluster.scheduler import assign, block_cyclic
 from repro.cluster.topology import (SNITCH_CLUSTER, ClusterConfig,
                                     OperatingPoint)
 from repro.core.energy import (L0_CAPACITY, P_CONST, P_DMA, P_FETCH_FREP,
@@ -164,9 +171,70 @@ def _resolve_point(cfg: ClusterConfig, name: str) -> OperatingPoint:
                      f"{[p.name for p in cfg.operating_points]}")
 
 
+def _island_core_points(cfg: ClusterConfig,
+                        cand: Candidate) -> tuple[OperatingPoint, ...]:
+    """Expand the candidate's island layout to one point per core, cores
+    split as evenly as possible across the islands (earlier islands take
+    the remainder; with more islands than cores, the surplus islands get
+    no cores and drop out — the cross-product search may legally pair a
+    small ``n_cores`` with a wide layout)."""
+    pts = [_resolve_point(cfg, n) for n in cand.islands]
+    sizes = block_cyclic(cand.n_cores, len(pts)).blocks_per_core
+    out: list[OperatingPoint] = []
+    for p, n in zip(pts, sizes):
+        out.extend([p] * n)
+    return tuple(out)
+
+
+def _evaluate_het(workload: Workload, cand: Candidate, problem: int,
+                  cfg: ClusterConfig,
+                  power_cap_mw: float | None) -> CostEstimate:
+    """The heterogeneous (DVFS-island) pricing path: per-core rates,
+    weighted block assignment, per-point power grouping.  Cycles are
+    reference-clock cycles of the fastest island; with a uniform island
+    layout every figure equals the homogeneous path's bit-for-bit."""
+    sched = tuned_schedule(workload, cand)
+    block = cand.block
+    total_blocks = max(1, math.ceil(problem / block))
+    core_points = _island_core_points(cfg, cand)
+    speeds = tuple(p.freq_ghz for p in core_points)
+    f_ref = max(speeds)
+    assignment = assign(total_blocks, speeds, cand.strategy)
+    profile = _access_profile(workload, sched, block)
+
+    active = [i for i, b in enumerate(assignment.blocks_per_core) if b]
+    act_speeds = tuple(speeds[i] for i in active)
+    compute = 0.0
+    for pos, i in enumerate(active):
+        extra = profile.extra_stalls_het(cfg, act_speeds, pos)
+        c = _per_core_cycles(sched, assignment.blocks_per_core[i], block,
+                             cand.pipelined, extra)
+        compute = max(compute, c * (f_ref / speeds[i]))
+    transfer = (transfer_cycles(cfg, workload.bytes_per_elem * problem)
+                if workload.bytes_per_elem else 0)
+    cycles = max(compute, transfer)
+
+    time_ns = cycles / f_ref
+    pb = _core_power(workload, sched, block)
+    counts: dict[OperatingPoint, int] = {}
+    for i in active:
+        counts[core_points[i]] = counts.get(core_points[i], 0) + 1
+    power_mw = sum(n * scale_breakdown(pb, p, cfg.nominal).total
+                   for p, n in counts.items())
+    instrs = ((sched.n_int + sched.n_fp) * problem
+              + sched.block_overhead_instrs() * total_blocks)
+    return CostEstimate(
+        cycles=cycles, time_ns=time_ns, energy_pj=power_mw * time_ns,
+        ipc=instrs / cycles, power_mw=power_mw,
+        feasible=(power_cap_mw is None or power_mw <= power_cap_mw),
+        dma_bound=transfer > compute)
+
+
 @lru_cache(maxsize=16384)
 def _evaluate(workload: Workload, cand: Candidate, problem: int,
               cfg: ClusterConfig, power_cap_mw: float | None) -> CostEstimate:
+    if cand.islands:
+        return _evaluate_het(workload, cand, problem, cfg, power_cap_mw)
     point = _resolve_point(cfg, cand.point)
     sched = tuned_schedule(workload, cand)
     block = cand.block
@@ -212,4 +280,9 @@ def evaluate(workload: Workload | str, cand: Candidate,
                          f"{w.max_block}")
     if cand.n_cores < 1:
         raise ValueError(f"n_cores must be >= 1, got {cand.n_cores}")
+    if len(cand.islands) <= 1 and cand.strategy != "block_cyclic":
+        # With zero or one island the cores are uniform and every strategy
+        # reduces to block-cyclic — canonicalize so the cross-product
+        # search prices the redundant variants once, not three times.
+        cand = replace(cand, strategy="block_cyclic")
     return _evaluate(w, cand, problem or w.default_problem, cfg, power_cap_mw)

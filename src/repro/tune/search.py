@@ -343,14 +343,25 @@ def select_operating_point(workload: Workload | str,
                            n_cores: int | None = None,
                            power_cap_mw: float | None = None,
                            objective: str = "energy",
-                           cache: "_cache.TuneCache | None | bool" = None
-                           ) -> TuneResult:
+                           cache: "_cache.TuneCache | None | bool" = None,
+                           heterogeneous: bool = False,
+                           max_islands: int = 2) -> TuneResult:
     """Cluster operating-point selection: hold the plan knobs at their
     static defaults and search cores x DVFS ladder only — the tuner-backed
-    replacement for ``dvfs.optimal_point`` used by the sweeps."""
+    replacement for ``dvfs.optimal_point`` used by the sweeps.
+
+    ``heterogeneous=True`` widens the search to DVFS-island layouts and
+    the weighted scheduling strategies.  That space strictly contains the
+    homogeneous one (every ladder point appears as a single-island layout
+    pricing bit-for-bit like its homogeneous candidate), and the selection
+    stays exhaustive at this size — so the heterogeneous pick never scores
+    worse than the homogeneous pick under the same power cap.
+    """
     w = get_workload(workload) if isinstance(workload, str) else workload
     n_cores = cfg.n_cores if n_cores is None else n_cores
-    space = default_space(w, cfg, cluster=True, cores=(n_cores,))
+    space = default_space(w, cfg, cluster=True, cores=(n_cores,),
+                          heterogeneous=heterogeneous,
+                          max_islands=max_islands)
     for name in ("block", "fuse_fp", "movers", "pipelined"):
         space = space.with_values(name, (getattr(space.default, name),))
     return tune(w, objective=objective, cfg=cfg,

@@ -18,6 +18,14 @@ Knobs (field-for-field the ``Candidate`` dataclass):
   replica set to the Step-4 distinct buffers but serializes the phases.
 * ``n_cores``    — cluster scope: active cores (block-cyclic split).
 * ``point``      — cluster scope: DVFS operating point (by name).
+* ``islands``    — heterogeneous scope: per-island DVFS point names; the
+  cores split as evenly as possible over the islands.  ``()`` means
+  homogeneous (every core at ``point``); ``("a", "b")`` is a two-island
+  big.LITTLE layout.  The tuple length *is* the island-count knob.
+* ``strategy``   — heterogeneous scope: how blocks are shared across
+  unequal cores (``cluster.scheduler.assign`` strategies).  Irrelevant —
+  and ignored — when the islands are uniform, where every strategy
+  reduces to block-cyclic.
 
 Adding a knob: add the field to ``Candidate`` (with its static default),
 give it a value list in ``default_space``, and teach ``cost.evaluate`` its
@@ -30,6 +38,7 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, fields, replace
 
+from repro.cluster.scheduler import STRATEGIES
 from repro.cluster.topology import NOMINAL_POINT, SNITCH_CLUSTER, ClusterConfig
 from repro.tune.workloads import Workload
 
@@ -43,20 +52,27 @@ class Candidate:
     pipelined: bool = True
     n_cores: int = 1
     point: str = NOMINAL_POINT.name
+    islands: tuple[str, ...] = ()
+    strategy: str = "block_cyclic"
 
     def sort_key(self):
         """Deterministic tie-break order: prefer the larger block, no
-        fusion, the natural mover count, pipelining on, fewer cores —
-        i.e. prefer the candidate closest to the paper's static plan."""
+        fusion, the natural mover count, pipelining on, fewer cores,
+        fewer islands, the simpler schedule — i.e. prefer the candidate
+        closest to the paper's static plan."""
         return (-self.block, self.fuse_fp, -self.movers, not self.pipelined,
-                self.n_cores, self.point)
+                self.n_cores, self.point, len(self.islands), self.islands,
+                self.strategy != "block_cyclic", self.strategy)
 
     def to_dict(self) -> dict:
         return {f.name: getattr(self, f.name) for f in fields(self)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
-        return cls(**{f.name: d[f.name] for f in fields(cls)})
+        vals = {f.name: d[f.name] for f in fields(cls)}
+        # JSON round-trips tuples as lists; restore hashability.
+        vals["islands"] = tuple(vals["islands"])
+        return cls(**vals)
 
 
 @dataclass(frozen=True)
@@ -138,23 +154,55 @@ def _block_ladder(cap: int, rungs: int = 5) -> tuple[int, ...]:
     return tuple(sorted(out))
 
 
+def island_ladder(cfg: ClusterConfig, max_islands: int = 2,
+                  points: tuple[str, ...] | None = None
+                  ) -> tuple[tuple[str, ...], ...]:
+    """The island-layout knob values for a cluster's DVFS ladder:
+    ``()`` (homogeneous at the ``point`` knob), every single-island layout
+    (homogeneous at that point — the heterogeneous space strictly contains
+    the homogeneous one), and every frequency-descending multi-island
+    combination up to ``max_islands`` islands.  ``points`` restricts the
+    layouts to a subset of the ladder (by name)."""
+    allowed = cfg.operating_points if points is None else \
+        tuple(p for p in cfg.operating_points if p.name in points)
+    names = [p.name for p in sorted(allowed, key=lambda p: -p.freq_ghz)]
+    out: list[tuple[str, ...]] = [()]
+    for k in range(1, max_islands + 1):
+        out.extend(itertools.combinations(names, k))
+    return tuple(out)
+
+
 def default_space(workload: Workload, cfg: ClusterConfig = SNITCH_CLUSTER,
                   cluster: bool = False,
                   cores: tuple[int, ...] | None = None,
-                  points: tuple[str, ...] | None = None) -> SearchSpace:
+                  points: tuple[str, ...] | None = None,
+                  heterogeneous: bool = False,
+                  max_islands: int = 2) -> SearchSpace:
     """The standard knob set for a workload.
 
     Single-PE by default (one core, nominal point — the paper's setting);
-    ``cluster=True`` adds the cores x DVFS-point scope.
+    ``cluster=True`` adds the cores x DVFS-point scope;
+    ``heterogeneous=True`` (implies cluster) additionally opens the
+    DVFS-island layout and the weighted scheduling strategy.  The island
+    knob subsumes the point sweep (single-island layouts are the
+    homogeneous points), so the ``point`` knob is pinned to its default
+    there to avoid a redundant cross product.
     """
     sched = workload.schedule()
-    if cluster:
+    if cluster or heterogeneous:
         cores = cores or tuple(c for c in (1, 2, 4, 8, 16)
                                if c <= cfg.n_cores) or (cfg.n_cores,)
         points = points or tuple(p.name for p in cfg.operating_points)
     else:
         cores = cores or (1,)
         points = points or (cfg.nominal.name,)
+    default_point = (cfg.nominal.name if cfg.nominal.name in points
+                     else points[0])
+    if heterogeneous:
+        # The island knob subsumes the point sweep, but must respect the
+        # caller's point restriction; the point knob pins to its default.
+        island_values = island_ladder(cfg, max_islands, points)
+        points = (default_point,)
     knobs = (
         Knob("block", _block_ladder(workload.max_block)),
         Knob("fuse_fp", (False, True) if len(sched.fp_bodies) > 1
@@ -164,8 +212,12 @@ def default_space(workload: Workload, cfg: ClusterConfig = SNITCH_CLUSTER,
         Knob("n_cores", tuple(sorted(cores))),
         Knob("point", tuple(points)),
     )
+    if heterogeneous:
+        knobs += (
+            Knob("islands", island_values),
+            Knob("strategy", STRATEGIES),
+        )
     default = Candidate(
         block=workload.max_block, fuse_fp=False, movers=sched.n_ssrs,
-        pipelined=True, n_cores=max(cores),
-        point=cfg.nominal.name if cfg.nominal.name in points else points[0])
+        pipelined=True, n_cores=max(cores), point=default_point)
     return SearchSpace(knobs, default)

@@ -1,0 +1,120 @@
+"""Unit tests for the ``benchmarks/run.py --diff`` perf-trajectory tool
+over two synthetic ``BENCH_*.json`` snapshots."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from benchmarks.run import diff_snapshots, format_diff
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _snapshot(lines_by_section):
+    return {"schema": 1,
+            "sections": {name: {"lines": lines, "data": None, "error": None}
+                         for name, lines in lines_by_section.items()}}
+
+
+SNAP_A = _snapshot({
+    "fig2": ["fig2.expf,speedup,1.50", "fig2.logf,speedup,1.30"],
+    "cluster": ["cluster.expf,8,1.00GHz@0.80V,1.40,200.0",
+                "cluster.expf,16,1.00GHz@0.80V,1.35,400.0"],
+})
+SNAP_B = _snapshot({
+    "fig2": ["fig2.expf,speedup,1.50",          # unchanged
+             "fig2.logf,speedup,1.10"],          # regressed ~15%
+    "cluster": ["cluster.expf,8,1.00GHz@0.80V,1.40,210.0",  # power +5%
+                "cluster.expf,16,1.00GHz@0.80V,1.35,400.0",
+                "cluster.het.expf,lpt,1.45"],     # new row
+})
+
+
+class TestDiffSnapshots:
+    def test_identical_snapshots_report_nothing(self):
+        doc = diff_snapshots(SNAP_A, SNAP_A)
+        assert doc["changed"] == []
+        assert doc["only_in_a"] == [] and doc["only_in_b"] == []
+        assert doc["n_compared"] == 4
+        assert any("identical" in line for line in format_diff(doc))
+
+    def test_moved_fields_surface_with_relative_delta(self):
+        doc = diff_snapshots(SNAP_A, SNAP_B, threshold=0.02)
+        changed = {(r["section"], r["key"]): r for r in doc["changed"]}
+        # logf speedup 1.30 -> 1.10: ~15% move, reported
+        key = ("fig2", "fig2.logf,speedup")
+        assert key in changed
+        assert changed[key]["a"] == 1.30 and changed[key]["b"] == 1.10
+        assert changed[key]["rel_delta"] == pytest.approx(0.2 / 1.3)
+        # power 200 -> 210: 5% move, reported
+        assert ("cluster", "cluster.expf,1.00GHz@0.80V") in changed
+
+    def test_threshold_suppresses_small_moves(self):
+        doc = diff_snapshots(SNAP_A, SNAP_B, threshold=0.10)
+        keys = {(r["section"], r["key"]) for r in doc["changed"]}
+        assert ("fig2", "fig2.logf,speedup") in keys        # 15% > 10%
+        assert ("cluster", "cluster.expf,1.00GHz@0.80V") not in keys  # 5%
+
+    def test_added_and_removed_lines(self):
+        doc = diff_snapshots(SNAP_A, SNAP_B)
+        assert doc["only_in_b"] == ["cluster:cluster.het.expf,lpt"]
+        assert doc["only_in_a"] == []
+        rev = diff_snapshots(SNAP_B, SNAP_A)
+        assert rev["only_in_a"] == ["cluster:cluster.het.expf,lpt"]
+
+    def test_unchanged_matching_is_occurrence_aware(self):
+        """Two lines with the same textual key (differing only in numeric
+        columns) diff positionally, not first-match."""
+        a = _snapshot({"s": ["k,1.0", "k,2.0"]})
+        b = _snapshot({"s": ["k,1.0", "k,3.0"]})
+        doc = diff_snapshots(a, b)
+        assert len(doc["changed"]) == 1
+        assert doc["changed"][0]["occurrence"] == 1
+        assert doc["changed"][0]["a"] == 2.0
+        assert doc["changed"][0]["b"] == 3.0
+
+    def test_zero_baseline_reports_infinite_delta(self):
+        a = _snapshot({"s": ["k,0.0"]})
+        b = _snapshot({"s": ["k,5.0"]})
+        doc = diff_snapshots(a, b)
+        assert doc["changed"][0]["rel_delta"] == float("inf")
+
+    def test_repeat_count_change_reports_shape_not_bogus_deltas(self):
+        """Dropping one row of a repeated key (e.g. removing a core count
+        from a sweep) must not positionally cross-match the survivors
+        against unrelated rows: the group is flagged as shape-changed and
+        excluded from per-field comparison."""
+        a = _snapshot({"s": ["k,1,100.0", "k,2,200.0", "other,7.0"]})
+        b = _snapshot({"s": ["k,2,200.0", "other,7.0"]})
+        doc = diff_snapshots(a, b)
+        assert doc["changed"] == []
+        assert doc["shape_changed"] == ["s:k"]
+        assert doc["only_in_a"] == [] and doc["only_in_b"] == []
+        assert doc["n_compared"] == 1          # just the 'other' row
+        assert any(line.startswith("diff.shape_changed,s:k")
+                   for line in format_diff(doc))
+
+
+class TestCli:
+    def test_diff_cli_end_to_end(self, tmp_path):
+        pa, pb = tmp_path / "A.json", tmp_path / "B.json"
+        pa.write_text(json.dumps(SNAP_A))
+        pb.write_text(json.dumps(SNAP_B))
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--diff", str(pa), str(pb)],
+            capture_output=True, text=True, cwd=REPO, check=True)
+        assert "diff.changed,fig2,fig2.logf,speedup" in out.stdout
+        assert "diff.added,cluster:cluster.het.expf,lpt" in out.stdout
+
+    def test_diff_rejects_missing_file(self, tmp_path):
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--diff", str(tmp_path / "nope.json"),
+             str(tmp_path / "nope2.json")],
+            capture_output=True, text=True, cwd=REPO)
+        assert out.returncode != 0
+        assert "cannot read snapshot" in out.stderr

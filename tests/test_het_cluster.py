@@ -1,0 +1,215 @@
+"""Heterogeneous-cluster invariants.
+
+THE contract (the homogeneous-reduction invariant): a heterogeneous
+cluster whose cores all sit at identical operating points must reproduce
+the homogeneous machinery's numbers *bit-for-bit* — the single-core and
+homogeneous-cluster figures pinned by ``tests/test_cluster.py`` stay the
+ground truth, and the island path is a strict extension.  Plus: the
+weighted schedules actually help on mixed islands, and the tuner's
+heterogeneous operating point never scores worse than the homogeneous one
+under the same power cap.
+"""
+
+import pytest
+
+from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, ClusterConfig,
+                           DvfsIsland, compare_strategies, evaluate_cluster,
+                           evaluate_cluster_het, het_cluster_power_mw,
+                           cluster_power_mw, parse_islands)
+from repro.cluster.scheduler import STRATEGIES
+from repro.core.analytics import TABLE_I
+from repro.core.energy import evaluate_energy
+from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
+from repro.core.timing import evaluate_kernel
+
+BIG = SNITCH_CLUSTER.point("1.45GHz@1.00V")
+LITTLE = SNITCH_CLUSTER.point("0.50GHz@0.60V")
+BIG_LITTLE = SNITCH_CLUSTER.with_islands(DvfsIsland(2, BIG),
+                                         DvfsIsland(6, LITTLE))
+
+
+class TestTopology:
+    def test_islands_must_cover_the_cores(self):
+        with pytest.raises(ValueError):
+            ClusterConfig(n_cores=8, islands=(DvfsIsland(2, BIG),))
+
+    def test_island_needs_cores(self):
+        with pytest.raises(ValueError):
+            DvfsIsland(0, BIG)
+
+    def test_with_islands_sets_core_count(self):
+        assert BIG_LITTLE.n_cores == 8
+        assert BIG_LITTLE.is_heterogeneous
+        assert BIG_LITTLE.core_points() == (BIG,) * 2 + (LITTLE,) * 6
+
+    def test_with_cores_drops_stale_islands(self):
+        assert BIG_LITTLE.with_cores(4).islands is None
+
+    def test_homogeneous_core_points_use_default(self):
+        assert SNITCH_CLUSTER.core_points(BIG) == (BIG,) * 8
+        assert SNITCH_CLUSTER.core_points() == (NOMINAL_POINT,) * 8
+
+    def test_uniform_islands_not_heterogeneous(self):
+        cfg = SNITCH_CLUSTER.with_islands(DvfsIsland(4, BIG),
+                                          DvfsIsland(4, BIG))
+        assert not cfg.is_heterogeneous
+
+    def test_parse_islands_round_trip(self):
+        isl = parse_islands("2@1.45GHz@1.00V,6@0.50GHz@0.60V",
+                            SNITCH_CLUSTER)
+        assert isl == (DvfsIsland(2, BIG), DvfsIsland(6, LITTLE))
+        with pytest.raises(ValueError):
+            parse_islands("x@1.45GHz@1.00V", SNITCH_CLUSTER)
+        with pytest.raises(ValueError):
+            parse_islands("2@3.00GHz@9.00V", SNITCH_CLUSTER)
+
+
+class TestHomogeneousReduction:
+    """Identical per-core points → the island path reproduces the
+    homogeneous numbers bit-for-bit, for every strategy."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("name", KERNELS)
+    def test_cluster_8core_nominal_exact(self, name, strategy):
+        hom = evaluate_cluster(name, SNITCH_CLUSTER, 8)
+        het = evaluate_cluster_het(name, SNITCH_CLUSTER, strategy)
+        assert het.cycles_copift == hom.cycles_copift
+        assert het.cycles_base == hom.cycles_base
+        assert het.speedup == hom.speedup
+        assert het.ipc_copift == hom.ipc_copift
+        assert het.ipc_base == hom.ipc_base
+        assert het.power_copift_mw == hom.power_copift_mw
+        assert het.power_base_mw == hom.power_base_mw
+        assert het.energy_saving == hom.energy_saving
+        assert het.time_us == hom.time_us
+        assert het.energy_pj_per_elem == hom.energy_pj_per_elem
+        assert het.dma_bound == hom.dma_bound
+        assert het.dma_utilization == hom.dma_utilization
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_single_core_reduces_to_paper_numbers(self, strategy):
+        """One core at nominal through the heterogeneous path equals the
+        paper-calibrated single-PE machinery — the same contract
+        ``tests/test_cluster.py`` pins for the homogeneous path."""
+        cfg1 = SNITCH_CLUSTER.with_cores(1)
+        for name in KERNELS:
+            pe = evaluate_kernel(name, baseline_trace(name),
+                                 copift_schedule(name),
+                                 TABLE_I[name].max_block)
+            het = evaluate_cluster_het(name, cfg1, strategy)
+            assert het.speedup == pe.speedup
+            assert het.ipc_copift == pe.ipc_copift
+            assert het.cycles_copift == pe.cycles_copift
+            assert het.cycles_base == pe.cycles_base
+            en = evaluate_energy(name)
+            assert het.energy_saving == en.energy_saving
+            assert het.power_ratio == en.power_ratio
+
+    def test_explicit_uniform_islands_also_exact(self):
+        cfg = SNITCH_CLUSTER.with_islands(DvfsIsland(3, NOMINAL_POINT),
+                                          DvfsIsland(5, NOMINAL_POINT))
+        hom = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        het = evaluate_cluster_het("expf", cfg, "lpt")
+        assert het.cycles_copift == hom.cycles_copift
+        assert het.energy_pj_per_elem == hom.energy_pj_per_elem
+
+    def test_het_power_grouping_matches_homogeneous_product(self):
+        for n in (1, 3, 8):
+            assert het_cluster_power_mw(SNITCH_CLUSTER, "expf",
+                                        (NOMINAL_POINT,) * n) \
+                == cluster_power_mw(SNITCH_CLUSTER, "expf", n)
+
+
+class TestHeterogeneousBehavior:
+    def test_weighted_strategies_beat_block_cyclic_on_big_little(self):
+        res = compare_strategies("expf", BIG_LITTLE, total_blocks=48)
+        assert res["lpt"].time_us < res["block_cyclic"].time_us
+        assert res["static_proportional"].time_us \
+            < res["block_cyclic"].time_us
+        assert res["lpt"].imbalance < res["block_cyclic"].imbalance
+
+    def test_big_cores_get_more_blocks(self):
+        r = evaluate_cluster_het("expf", BIG_LITTLE, "lpt", total_blocks=48)
+        big_share = min(r.blocks_per_core[:2])
+        little_share = max(r.blocks_per_core[2:])
+        assert big_share > little_share
+
+    def test_reference_clock_is_the_fastest_island(self):
+        r = evaluate_cluster_het("expf", BIG_LITTLE, "lpt")
+        assert r.ref_freq_ghz == BIG.freq_ghz
+
+    def test_mixed_islands_power_between_extremes(self):
+        r = evaluate_cluster_het("expf", BIG_LITTLE, "lpt")
+        all_big = evaluate_cluster("expf", SNITCH_CLUSTER, 8, BIG)
+        all_little = evaluate_cluster("expf", SNITCH_CLUSTER, 8, LITTLE)
+        assert all_little.power_copift_mw < r.power_copift_mw \
+            < all_big.power_copift_mw
+
+    def test_needs_at_least_one_block(self):
+        with pytest.raises(ValueError):
+            evaluate_cluster_het("expf", BIG_LITTLE, total_blocks=0)
+
+
+class TestHeterogeneousTuner:
+    def test_uniform_island_candidate_prices_like_homogeneous(self):
+        from repro.tune import Candidate, evaluate, get_workload
+        w = get_workload("expf")
+        for pt in SNITCH_CLUSTER.operating_points:
+            hom = evaluate(w, Candidate(block=w.max_block, n_cores=8,
+                                        point=pt.name))
+            het = evaluate(w, Candidate(block=w.max_block, n_cores=8,
+                                        islands=(pt.name,), strategy="lpt"))
+            assert het.cycles == hom.cycles
+            assert het.time_ns == hom.time_ns
+            assert het.energy_pj == hom.energy_pj
+            assert het.power_mw == hom.power_mw
+
+    def test_island_space_contains_homogeneous_and_default(self):
+        from repro.tune import default_space, get_workload, island_ladder
+        w = get_workload("expf")
+        space = default_space(w, SNITCH_CLUSTER, heterogeneous=True)
+        assert space.default in space
+        assert space.default.islands == ()
+        layouts = set(space.knob("islands").values)
+        for p in SNITCH_CLUSTER.operating_points:
+            assert (p.name,) in layouts
+        assert () in layouts
+        assert island_ladder(SNITCH_CLUSTER) == space.knob("islands").values
+
+    @pytest.mark.parametrize("cap", [None, 250.0])
+    def test_het_operating_point_never_worse_than_homogeneous(self, cap):
+        """Acceptance: same power cap, same objective — the heterogeneous
+        search returns an operating plan at least as good as the
+        homogeneous ladder's."""
+        from repro.tune import select_operating_point
+        hom = select_operating_point("expf", n_cores=8, power_cap_mw=cap,
+                                     objective="edp", cache=False)
+        het = select_operating_point("expf", n_cores=8, power_cap_mw=cap,
+                                     objective="edp", cache=False,
+                                     heterogeneous=True)
+        assert het.best_cost.edp <= hom.best_cost.edp
+        if cap is not None:
+            assert het.best_cost.power_mw <= cap
+
+    def test_candidate_round_trips_island_tuple(self):
+        import json
+
+        from repro.tune import Candidate
+        c = Candidate(block=64, n_cores=8,
+                      islands=("1.45GHz@1.00V", "0.50GHz@0.60V"),
+                      strategy="lpt")
+        back = Candidate.from_dict(json.loads(json.dumps(c.to_dict())))
+        assert back == c
+        assert isinstance(back.islands, tuple)
+
+    def test_more_islands_than_cores_drops_surplus(self):
+        from repro.tune import Candidate, evaluate, get_workload
+        w = get_workload("expf")
+        narrow = evaluate(w, Candidate(block=w.max_block, n_cores=1,
+                                       islands=("1.45GHz@1.00V",
+                                                "0.50GHz@0.60V"),
+                                       strategy="lpt"))
+        single = evaluate(w, Candidate(block=w.max_block, n_cores=1,
+                                       islands=("1.45GHz@1.00V",),
+                                       strategy="lpt"))
+        assert narrow == single

@@ -1,0 +1,128 @@
+"""Property tests for the weighted cluster scheduler (``assign``):
+conservation, max-load bounds, and the exact homogeneous reduction of
+every strategy to ``block_cyclic`` under uniform core speeds.
+
+Property-based cases run when ``hypothesis`` is installed (the CI
+configuration); example-based cases pin the same invariants on a bare
+install.
+"""
+
+import pytest
+
+from repro.cluster.scheduler import (STRATEGIES, assign, block_cyclic)
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+SPEED_LADDER = (0.50, 0.75, 1.00, 1.25, 1.45)
+
+
+def _speeds_strategy():
+    return st.lists(st.sampled_from(SPEED_LADDER), min_size=1, max_size=16)
+
+
+class TestExamples:
+    """Example-based invariants (always run, even without hypothesis)."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("n_blocks,speeds", [
+        (0, (1.0, 1.0)),
+        (1, (0.5, 1.45)),
+        (36, (1.45, 1.45, 0.5, 0.5)),
+        (48, (1.0,) * 8),
+        (7, (0.75, 1.0, 1.25)),
+        (100, (0.5, 0.5, 0.5, 1.45, 1.45, 1.0, 0.75)),
+    ])
+    def test_conservation_and_bounds(self, strategy, n_blocks, speeds):
+        a = assign(n_blocks, speeds, strategy)
+        assert sum(a.blocks_per_core) == n_blocks
+        assert all(b >= 0 for b in a.blocks_per_core)
+        assert a.max_blocks <= n_blocks or n_blocks == 0
+        assert all(b <= a.max_blocks for b in a.blocks_per_core)
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("n_blocks,n_cores", [(0, 4), (1, 8), (36, 16),
+                                                  (48, 8), (7, 3), (100, 7)])
+    def test_uniform_speeds_reduce_to_block_cyclic(self, strategy, n_blocks,
+                                                   n_cores):
+        for speed in (1.0, 0.5, 1.45):
+            a = assign(n_blocks, (speed,) * n_cores, strategy)
+            assert a.blocks_per_core == \
+                block_cyclic(n_blocks, n_cores).blocks_per_core
+
+    def test_weighted_strategies_track_speed(self):
+        """A 2x-faster core must get at least as many blocks under every
+        weighted strategy (never under block-cyclic's blind split)."""
+        for strategy in ("static_proportional", "lpt"):
+            a = assign(30, (2.0, 1.0), strategy)
+            assert a.blocks_per_core[0] >= a.blocks_per_core[1]
+            assert a.blocks_per_core == (20, 10)
+
+    def test_lpt_makespan_never_worse_than_block_cyclic(self):
+        for speeds in [(1.45, 1.45, 0.5, 0.5), (2.0, 1.0, 1.0),
+                       (1.0, 1.0), (0.5, 0.75, 1.0, 1.25, 1.45)]:
+            for n_blocks in (1, 7, 36, 100):
+                lpt = assign(n_blocks, speeds, "lpt")
+                bc = assign(n_blocks, speeds, "block_cyclic")
+                assert lpt.makespan <= bc.makespan + 1e-12
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError):
+            assign(-1, (1.0,))
+        with pytest.raises(ValueError):
+            assign(4, ())
+        with pytest.raises(ValueError):
+            assign(4, (1.0, 0.0))
+        with pytest.raises(ValueError):
+            assign(4, (1.0, -2.0))
+        with pytest.raises(ValueError):
+            assign(4, (1.0,), "no_such_strategy")
+
+    def test_finish_times_and_weighted_imbalance(self):
+        a = assign(12, (2.0, 1.0), "static_proportional")
+        assert a.blocks_per_core == (8, 4)
+        assert a.finish_times == (4.0, 4.0)
+        assert a.makespan == 4.0
+        assert a.weighted_imbalance == 1.0
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestProperties:
+    """Randomized invariants over block counts x speed vectors."""
+
+    @settings(max_examples=200, deadline=None)
+    @given(n_blocks=st.integers(min_value=0, max_value=512),
+           speeds=_speeds_strategy(),
+           strategy=st.sampled_from(STRATEGIES))
+    def test_conservation(self, n_blocks, speeds, strategy):
+        a = assign(n_blocks, speeds, strategy)
+        assert sum(a.blocks_per_core) == n_blocks
+        assert len(a.blocks_per_core) == len(speeds)
+        assert all(b >= 0 for b in a.blocks_per_core)
+
+    @settings(max_examples=200, deadline=None)
+    @given(n_blocks=st.integers(min_value=0, max_value=512),
+           speeds=_speeds_strategy(),
+           strategy=st.sampled_from(STRATEGIES))
+    def test_no_core_exceeds_max_blocks(self, n_blocks, speeds, strategy):
+        a = assign(n_blocks, speeds, strategy)
+        assert all(b <= a.max_blocks for b in a.blocks_per_core)
+        assert a.max_blocks <= n_blocks or n_blocks == 0
+
+    @settings(max_examples=200, deadline=None)
+    @given(n_blocks=st.integers(min_value=0, max_value=512),
+           n_cores=st.integers(min_value=1, max_value=16),
+           speed=st.sampled_from(SPEED_LADDER),
+           strategy=st.sampled_from(STRATEGIES))
+    def test_uniform_reduces_to_block_cyclic(self, n_blocks, n_cores, speed,
+                                             strategy):
+        a = assign(n_blocks, (speed,) * n_cores, strategy)
+        assert a.blocks_per_core == \
+            block_cyclic(n_blocks, n_cores).blocks_per_core
+
+    @settings(max_examples=100, deadline=None)
+    @given(n_blocks=st.integers(min_value=1, max_value=512),
+           speeds=_speeds_strategy())
+    def test_lpt_beats_or_matches_block_cyclic_makespan(self, n_blocks,
+                                                        speeds):
+        lpt = assign(n_blocks, speeds, "lpt")
+        bc = assign(n_blocks, speeds, "block_cyclic")
+        assert lpt.makespan <= bc.makespan + 1e-12

@@ -179,6 +179,69 @@ class TestCache:
         assert not r.from_cache
         assert len(TuneCache(p)) == 1
 
+    def test_truncated_cache_file_falls_back_to_cold_search(self, tmp_path):
+        """A snapshot cut mid-write (e.g. a killed process on a filesystem
+        without atomic rename) must read as empty, then heal on the next
+        flush."""
+        p = tmp_path / "cache.json"
+        warm = TuneCache(p)
+        tune("prng", cache=warm)
+        whole = p.read_text()
+        p.write_text(whole[:len(whole) // 2])
+        cold = TuneCache(p)
+        assert len(cold) == 0
+        r = tune("prng", cache=cold)
+        assert not r.from_cache
+        # The failed read did not poison the file: it is valid JSON again.
+        assert len(TuneCache(p)) == 1
+
+    def test_wrong_schema_cache_treated_as_empty(self, tmp_path):
+        p = tmp_path / "cache.json"
+        p.write_text('{"schema": 999, "entries": {"k": {}}}')
+        assert len(TuneCache(p)) == 0
+        p.write_text('["a", "list"]')
+        assert len(TuneCache(p)) == 0
+
+    def test_unwritable_cache_path_degrades_to_memory_only(self, tmp_path):
+        """$REPRO_TUNE_CACHE at an unwritable location must not fail the
+        tune() call: one RuntimeWarning, then in-memory caching."""
+        import warnings
+
+        blocked = tmp_path / "file-not-dir"
+        blocked.write_text("")          # a *file* where a dir is needed
+        p = blocked / "sub" / "cache.json"
+        cache = TuneCache(p)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            r1 = tune("prng", cache=cache)
+            r2 = tune("prng", cache=cache)
+        assert not r1.from_cache
+        assert r2.from_cache            # in-memory entry still serves hits
+        assert [w for w in caught
+                if issubclass(w.category, RuntimeWarning)]
+        assert not blocked.is_dir()     # nothing was forced onto disk
+
+    def test_readonly_directory_degrades_gracefully(self, tmp_path):
+        import os
+        import stat
+        import warnings
+
+        ro = tmp_path / "ro"
+        ro.mkdir()
+        ro.chmod(stat.S_IRUSR | stat.S_IXUSR)
+        if os.access(ro, os.W_OK):      # pragma: no cover (running as root)
+            pytest.skip("cannot make directory read-only here")
+        try:
+            cache = TuneCache(ro / "cache.json")
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                r = tune("prng", cache=cache)
+            assert not r.from_cache
+            assert [w for w in caught
+                    if issubclass(w.category, RuntimeWarning)]
+        finally:
+            ro.chmod(stat.S_IRWXU)
+
 
 class TestClusterScope:
     def test_power_cap_respected(self):
