@@ -26,9 +26,9 @@ import argparse
 import json
 import sys
 
-from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, STRATEGIES,
-                           evaluate_cluster, evaluate_cluster_het, headline,
-                           parse_islands)
+from repro.api import (NOMINAL_POINT, SNITCH_CLUSTER, Target, Tuner,
+                       evaluate, headline)
+from repro.cluster import STRATEGIES
 from repro.core.kernels_isa import KERNELS
 
 DEFAULT_CORES = (1, 2, 4, 8, 16)
@@ -45,11 +45,10 @@ def sweep_rows(cores=DEFAULT_CORES, points=None, kernels=None,
     kernels = kernels if kernels is not None else list(KERNELS)
     rows = []
     for n in cores:
-        cfg = SNITCH_CLUSTER.with_cores(n)
         for pt in points:
+            tgt = Target.homogeneous(n_cores=n, point=pt)
             for k in kernels:
-                r = evaluate_cluster(k, cfg, n, pt,
-                                     blocks_per_core=blocks_per_core)
+                r = evaluate(k, tgt, blocks_per_core=blocks_per_core)
                 rows.append(dict(
                     kernel=k, n_cores=n, point=pt.name,
                     freq_ghz=pt.freq_ghz, vdd=pt.vdd,
@@ -71,10 +70,9 @@ def aggregate_rows(cores=DEFAULT_CORES, points=None,
     points = points if points is not None else SNITCH_CLUSTER.operating_points
     out = []
     for n in cores:
-        cfg = SNITCH_CLUSTER.with_cores(n)
         for pt in points:
-            res = [evaluate_cluster(k, cfg, n, pt,
-                                    blocks_per_core=blocks_per_core)
+            tgt = Target.homogeneous(n_cores=n, point=pt)
+            res = [evaluate(k, tgt, blocks_per_core=blocks_per_core)
                    for k in KERNELS]
             agg = headline(res)
             agg.update(n_cores=n, point=pt.name)
@@ -102,19 +100,18 @@ def het_rows(island_spec: str = DEFAULT_ISLAND_SPEC,
     """Heterogeneous sweep (``--heterogeneous``): one row per (kernel x
     scheduling strategy) on the island layout, with the homogeneous
     nominal cluster of the same core count as the reference column."""
-    islands = parse_islands(island_spec, SNITCH_CLUSTER)
-    cfg = SNITCH_CLUSTER.with_islands(*islands)
+    het_target = Target.heterogeneous(island_spec)
     kernels = kernels if kernels is not None else list(KERNELS)
     rows = []
     for k in kernels:
-        hom = evaluate_cluster(k, SNITCH_CLUSTER.with_cores(cfg.n_cores),
-                               cfg.n_cores, blocks_per_core=blocks_per_core)
+        hom = evaluate(k, Target.homogeneous(n_cores=het_target.n_cores),
+                       blocks_per_core=blocks_per_core)
         for s in strategies:
-            r = evaluate_cluster_het(k, cfg, s,
-                                     blocks_per_core=blocks_per_core)
+            r = evaluate(k, het_target.with_strategy(s),
+                         blocks_per_core=blocks_per_core)
             rows.append(dict(
                 kernel=k, strategy=s, islands=island_spec,
-                n_cores=cfg.n_cores,
+                n_cores=het_target.n_cores,
                 blocks_per_core=tuple(r.blocks_per_core),
                 time_us=r.time_us, imbalance=r.imbalance,
                 speedup=r.speedup, power_mw=r.power_copift_mw,
@@ -130,20 +127,22 @@ def tuned_rows(cores=(8,), power_cap_mw: float | None = None,
                heterogeneous: bool = False) -> list[dict]:
     """Tuner-backed operating-point selection (``--tuned``): for each
     built-in tunable workload, hold the plan knobs at the paper defaults
-    and let ``repro.tune`` pick the DVFS point under the power cap —
-    the model-guided replacement for reading the sweep by eye."""
-    from repro.tune import select_operating_point
+    and let the facade tuner pick the DVFS point under the power cap —
+    the model-guided replacement for reading the sweep by eye.  The
+    heterogeneous search additionally refines per-island block sizes
+    (never worse than the shared-block plan under the same cap)."""
     from repro.tune.workloads import BUILTIN_KERNELS
+    tuner = Tuner(Target.homogeneous(power_cap_mw=power_cap_mw))
     rows = []
     for n in cores:
         for k in BUILTIN_KERNELS:
-            res = select_operating_point(k, SNITCH_CLUSTER, n,
-                                         power_cap_mw=power_cap_mw,
-                                         objective=objective,
-                                         heterogeneous=heterogeneous)
+            res = tuner.operating_point(k, n_cores=n, objective=objective,
+                                        heterogeneous=heterogeneous,
+                                        per_island_blocks=heterogeneous)
             rows.append(dict(
                 kernel=k, n_cores=n, point=res.best.point,
                 islands=list(res.best.islands),
+                island_blocks=list(res.best.island_blocks),
                 strategy=res.best.strategy,
                 objective=objective, power_cap_mw=power_cap_mw,
                 power_mw=res.best_cost.power_mw,
@@ -277,6 +276,9 @@ def main(argv=None) -> None:
               "energy_pj_per_elem,saving_vs_nominal")
         for r in rows:
             islands = "+".join(r["islands"]) or "homogeneous"
+            if r["island_blocks"]:
+                islands += " blocks=" + "/".join(str(b)
+                                                 for b in r["island_blocks"])
             print(f"cluster.tuned.{r['kernel']},{r['n_cores']},{r['point']},"
                   f"{islands},{r['strategy']},"
                   f"{r['power_mw']:.1f},{r['energy_pj_per_elem']:.2f},"

@@ -202,8 +202,15 @@ def main(argv=None) -> None:
     ap.add_argument("--threshold", type=float, default=0.02,
                     help="relative delta below which --diff stays quiet "
                          "(default 0.02)")
+    ap.add_argument("--fail-on-shape", action="store_true",
+                    help="with --diff: exit 1 when the snapshot *shape* "
+                         "changed (sections/lines appearing, vanishing or "
+                         "changing cardinality) — the CI perf-trajectory "
+                         "gate; numeric drift alone stays advisory")
     args = ap.parse_args(argv)
 
+    if args.fail_on_shape and not args.diff:
+        ap.error("--fail-on-shape only applies to --diff")
     if args.diff:
         if args.threshold < 0:
             ap.error(f"--threshold must be >= 0, got {args.threshold}")
@@ -214,8 +221,23 @@ def main(argv=None) -> None:
                 b = json.load(f)
         except (OSError, ValueError) as e:
             ap.error(f"cannot read snapshot: {e}")
-        for line in format_diff(diff_snapshots(a, b, args.threshold)):
+        doc = diff_snapshots(a, b, args.threshold)
+        for line in format_diff(doc):
             print(line)
+        if args.fail_on_shape:
+            # Shape = structure, at every granularity: repeated-key
+            # cardinality, whole lines, and individual numeric columns
+            # appearing/vanishing inside a surviving line (a=None or
+            # b=None in the changed rows).
+            column_shape = [r for r in doc["changed"]
+                            if r["a"] is None or r["b"] is None]
+            shape = (doc.get("shape_changed") or doc["only_in_a"]
+                     or doc["only_in_b"] or column_shape)
+            if shape:
+                print("diff.fail,snapshot shape changed (see "
+                      "diff.shape_changed/removed/added/changed lines "
+                      "above)")
+                sys.exit(1)
         return
 
     sections = _sections()

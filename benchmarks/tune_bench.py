@@ -44,15 +44,19 @@ def _tiny_space(workload):
 def generate(kernels=None, tiny: bool = False, measured: bool = False,
              cluster: bool = True, use_cache: bool = False) -> dict:
     """Structured rows for the CSV printer and the --json snapshot."""
+    from repro.api import Target, Tuner
     from repro.tune import (BUILTIN_KERNELS, default_space, get_workload,
-                            measure_candidates, select_operating_point, tune)
+                            measure_candidates)
     kernels = kernels or list(BUILTIN_KERNELS)
     cache = None if use_cache else False
+    tuner = Tuner(cache=cache)
+    cap_tuner = Tuner(Target.homogeneous(power_cap_mw=POWER_CAP_MW),
+                      cache=cache)
     rows = []
     for name in kernels:
         w = get_workload(name)
         space = _tiny_space(w) if tiny else default_space(w)
-        res = tune(w, space=space, cache=cache)
+        res = tuner.plan(w, space=space)
         row = dict(
             kernel=name, method=res.method, n_evaluated=res.n_evaluated,
             space_size=space.size, problem=res.problem,
@@ -77,9 +81,7 @@ def generate(kernels=None, tiny: bool = False, measured: bool = False,
                  power_mw=r.best_cost.power_mw,
                  saving_vs_nominal=r.predicted_energy_saving)
             for name in kernels
-            for r in [select_operating_point(name,
-                                             power_cap_mw=POWER_CAP_MW,
-                                             cache=cache)]
+            for r in [cap_tuner.operating_point(name)]
         ]
     return doc
 

@@ -4,8 +4,8 @@ Snitch cluster with TCDM contention, DMA overlap, load balancing and DVFS.
 Run:  PYTHONPATH=src python examples/cluster_demo.py
 """
 
-from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, cluster_roofline,
-                           evaluate_cluster, headline, optimal_point,
+from repro.api import NOMINAL_POINT, SNITCH_CLUSTER, Target, evaluate, headline
+from repro.cluster import (cluster_roofline, optimal_point,
                            scaling_efficiency, strong_scaling, weak_scaling)
 from repro.core.analytics import PAPER_HEADLINE
 from repro.core.kernels_isa import KERNELS
@@ -13,8 +13,7 @@ from repro.core.kernels_isa import KERNELS
 
 def main():
     print("— single-core reduction (the paper's numbers are the ground truth) —")
-    cfg1 = SNITCH_CLUSTER.with_cores(1)
-    res1 = [evaluate_cluster(k, cfg1, 1) for k in KERNELS]
+    res1 = [evaluate(k, Target.single_pe()) for k in KERNELS]
     agg1 = headline(res1)
     print(f"1-core geomean speedup      {agg1['geomean_speedup']:.3f}  "
           f"(paper: {PAPER_HEADLINE['geomean_speedup']})")
@@ -24,7 +23,7 @@ def main():
     print("\n— weak scaling on the 8-core Snitch cluster (work ∝ cores) —")
     print(f"{'kernel':18s} {'speedup':>8s} {'IPC':>7s} {'power':>8s} "
           f"{'E/elem':>9s} {'stall/acc':>9s}")
-    res8 = [evaluate_cluster(k, SNITCH_CLUSTER, 8) for k in KERNELS]
+    res8 = [evaluate(k, Target.homogeneous(n_cores=8)) for k in KERNELS]
     for r in res8:
         print(f"{r.name:18s} {r.speedup:8.3f} {r.ipc_copift:7.2f} "
               f"{r.power_copift_mw:6.1f}mW {r.energy_pj_per_elem:7.1f}pJ "
@@ -55,7 +54,7 @@ def main():
               f"{p.achieved_gflops:5.2f} GFLOP/s  [{p.bound}-bound]")
 
     print("\n— DVFS: energy-optimal point for 8-core expf, 250 mW cap —")
-    r8 = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+    r8 = evaluate("expf", Target.homogeneous(n_cores=8))
     best, sweep = optimal_point(SNITCH_CLUSTER, "expf", 8,
                                 r8.cycles_per_elem, power_cap_mw=250.0)
     for s in sweep:

@@ -4,30 +4,28 @@ clusters, weighted block scheduling, and the joint tuner search.
 Run:  PYTHONPATH=src python examples/het_cluster_demo.py
 """
 
-from repro.cluster import (SNITCH_CLUSTER, DvfsIsland, compare_strategies,
-                           evaluate_cluster, evaluate_cluster_het)
-from repro.tune import select_operating_point
+from repro.api import (SNITCH_CLUSTER, DvfsIsland, Target, Tuner,
+                       compare_strategies, evaluate)
 
 
 def main():
     big = SNITCH_CLUSTER.point("1.45GHz@1.00V")
     little = SNITCH_CLUSTER.point("0.50GHz@0.60V")
-    cfg = SNITCH_CLUSTER.with_islands(DvfsIsland(2, big),
-                                      DvfsIsland(6, little))
+    tgt = Target.heterogeneous((DvfsIsland(2, big), DvfsIsland(6, little)))
     print(f"cluster: 2x {big.name} + 6x {little.name} "
-          f"(heterogeneous={cfg.is_heterogeneous})")
+          f"(heterogeneous={tgt.is_heterogeneous})")
 
     print("\n— homogeneous reduction: identical islands reproduce the "
           "homogeneous model exactly —")
-    hom = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
-    het = evaluate_cluster_het("expf", SNITCH_CLUSTER, "lpt")
-    print(f"expf 8-core nominal:  homogeneous {hom.cycles_copift} cycles, "
-          f"island path {het.cycles_copift:.0f} cycles, "
+    hom = evaluate("expf", Target.homogeneous(n_cores=8))
+    het = evaluate("expf", Target.homogeneous(n_cores=8).with_strategy("lpt"))
+    print(f"expf 8-core nominal:  block-cyclic {hom.cycles_copift} cycles, "
+          f"lpt {het.cycles_copift:.0f} cycles (one code path), "
           f"equal={het.cycles_copift == hom.cycles_copift}")
 
     print("\n— scheduling strategies on the big.LITTLE cluster "
           "(expf, 48 blocks) —")
-    res = compare_strategies("expf", cfg, total_blocks=48)
+    res = compare_strategies("expf", tgt, total_blocks=48)
     base = res["block_cyclic"]
     for s, r in res.items():
         blocks = "/".join(str(b) for b in r.blocks_per_core)
@@ -38,15 +36,18 @@ def main():
 
     print("\n— tuner: homogeneous vs heterogeneous operating point, "
           "expf under a 250 mW cap —")
-    hom_pick = select_operating_point("expf", n_cores=8, power_cap_mw=250.0,
-                                      objective="edp", cache=False)
-    het_pick = select_operating_point("expf", n_cores=8, power_cap_mw=250.0,
-                                      objective="edp", cache=False,
-                                      heterogeneous=True)
+    tuner = Tuner(Target.homogeneous(power_cap_mw=250.0), cache=False)
+    hom_pick = tuner.operating_point("expf", n_cores=8, objective="edp")
+    het_pick = tuner.operating_point("expf", n_cores=8, objective="edp",
+                                     heterogeneous=True,
+                                     per_island_blocks=True)
     print(f"homogeneous pick:    {hom_pick.best.point}  "
           f"EDP {hom_pick.best_cost.edp:.3e}  "
           f"power {hom_pick.best_cost.power_mw:.1f} mW")
     islands = "+".join(het_pick.best.islands) or f"({het_pick.best.point})"
+    if het_pick.best.island_blocks:
+        islands += " blocks=" + "/".join(str(b)
+                                         for b in het_pick.best.island_blocks)
     print(f"heterogeneous pick:  {islands} / {het_pick.best.strategy}  "
           f"EDP {het_pick.best_cost.edp:.3e}  "
           f"power {het_pick.best_cost.power_mw:.1f} mW")

@@ -1,4 +1,5 @@
-"""Quickstart: the paper's kernels + the COPIFT analyzer in 60 lines.
+"""Quickstart: the whole pipeline through the one public facade,
+``repro.api`` — kernels, targets, evaluation, tuning — in 60 lines.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,46 +8,49 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro import core
-from repro.core.analytics import TABLE_I, geomean
-from repro.core.energy import evaluate_energy
-from repro.core.kernels_isa import baseline_trace, copift_schedule
-from repro.core.timing import evaluate_kernel
-from repro.kernels import ops
+from repro import api
 
-# --- 1. The paper's kernels as Pallas TPU kernels (interpret-mode on CPU).
+# --- 1. Kernels are registry objects, not strings: one spec binds the
+#        jit'd entry point, the ISA schedule and the tunable workload.
+expf = api.kernel("expf")
 x = jnp.linspace(-5, 5, 2048, dtype=jnp.float32)
-y = ops.exp(x, impl="pallas")
+with api.config(impl="pallas"):            # scoped — no global toggles
+    y = expf.run(x)
 print("exp  max rel err vs fp64:",
       float(np.abs(np.asarray(y) / np.exp(np.asarray(x, np.float64)) - 1).max()))
 
-pi = ops.mc_pi(seed=42, n_samples=1 << 18, kind="xoshiro128p", impl="pallas")
+pi = api.kernel("montecarlo").run(seed=42, n_samples=1 << 18)
 print("pi   via xoshiro128+ hit-and-miss:", float(pi))
 
-s = ops.softmax(jnp.asarray([[1.0, 2.0, 3.0]]), impl="pallas")
-print("softmax (the paper's LLM bridge):", np.asarray(s).round(4))
+# --- 2. Targets: a single PE is the 1-core cluster; paper headline numbers.
+single = api.Target.single_pe()
+results = [api.evaluate(k, single) for k in api.kernels()
+           if api.kernel(k).simulatable]
+agg = api.headline(results)
+print(f"\ngeomean speedup {agg['geomean_speedup']:.2f} (paper 1.47) | "
+      f"peak IPC {agg['peak_ipc']:.2f} (paper 1.75) | "
+      f"geomean energy saving {agg['geomean_energy_saving']:.2f} (paper 1.37)")
 
-# --- 2. The COPIFT methodology, executable: partition the expf kernel.
-part = core.partition(core.build_dfg(baseline_trace("expf")))
-print("\nexpf phases:", [p.domain.value for p in part.phases],
-      "| cross-domain cut edges:", part.n_cross_cuts, "(paper: 4)")
+# --- 3. The same evaluate() scales to the full 8-core Snitch cluster...
+r8 = api.evaluate(expf, api.Target.homogeneous(n_cores=8))
+print(f"\nexpf x8 cores: {r8.speedup:.2f}x speedup, "
+      f"{r8.power_copift_mw:.0f} mW, {r8.energy_pj_per_elem:.1f} pJ/elem")
 
-# --- 3. Analyze any JAX function for dual-issue potential (Eq. 1-3).
-def mixed(v):
-    k = jnp.floor(v * 1.442695).astype(jnp.int32)       # int thread
-    scale = jnp.left_shift(k + 127, 23).astype(jnp.float32)
-    return (v - k.astype(jnp.float32)) * scale           # fp thread
+# --- 4. ...and to heterogeneous DVFS islands (big.LITTLE), same code path.
+big_little = api.Target.heterogeneous("2@1.45GHz@1.00V,6@0.50GHz@0.60V")
+rh = api.evaluate(expf, big_little, total_blocks=48)
+print(f"expf big.LITTLE/lpt: blocks "
+      f"{'/'.join(str(b) for b in rh.blocks_per_core)}, "
+      f"{rh.time_us * 1e3:.0f} ns, {rh.power_copift_mw:.0f} mW")
 
-a = core.analyze(mixed, jnp.ones((64,), jnp.float32))
-print(f"analyze(mixed): {a.n_int} int / {a.n_fp} fp ops → "
-      f"predicted dual-issue speedup S''={a.predicted_speedup:.2f}")
-
-# --- 4. Reproduce the paper's headline numbers from the timing model.
-results = [evaluate_kernel(k, baseline_trace(k), copift_schedule(k),
-                           TABLE_I[k].max_block) for k in TABLE_I]
-print(f"\ngeomean speedup {geomean([r.speedup for r in results]):.2f} "
-      f"(paper 1.47) | peak IPC {max(r.ipc_copift for r in results):.2f} "
-      f"(paper 1.75)")
-energies = [evaluate_energy(k) for k in TABLE_I]
-print(f"geomean energy saving {geomean([e.energy_saving for e in energies]):.2f} "
-      f"(paper 1.37)")
+# --- 5. One Tuner over plans, tilings and operating points (shared cache).
+tuner = api.Tuner(api.Target.homogeneous(power_cap_mw=250.0), cache=False)
+plan = tuner.plan("softmax")
+op = tuner.operating_point("expf", heterogeneous=True,
+                           per_island_blocks=True)
+islands = "+".join(op.best.islands) or op.best.point
+print(f"\nsoftmax tuned plan: block {plan.best.block} "
+      f"({plan.predicted_speedup:.3f}x vs static)")
+print(f"expf operating point under 250 mW: {islands} "
+      f"({op.best_cost.power_mw:.0f} mW, "
+      f"{op.predicted_energy_saving:.2f}x energy vs nominal)")

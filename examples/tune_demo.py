@@ -8,9 +8,9 @@ import os
 import tempfile
 import time
 
+from repro.api import Target, Tuner
 from repro.core.analytics import TABLE_I
-from repro.tune import (BUILTIN_KERNELS, TuneCache, default_space,
-                        get_workload, select_operating_point, tune)
+from repro.tune import BUILTIN_KERNELS, TuneCache, default_space, get_workload
 
 
 def main():
@@ -21,11 +21,12 @@ def main():
         print(f"  {k.name:10s} {list(k.values)}")
     print(f"  {space.size} candidates; default = static plan {space.default}")
 
+    tuner = Tuner(cache=False)
     print("\n— tuned vs default, every built-in kernel —")
     print(f"{'kernel':12s} {'block':>5s} {'fuse':>5s} {'pipe':>5s} "
           f"{'default cyc':>12s} {'tuned cyc':>10s} {'speedup':>8s}")
     for name in BUILTIN_KERNELS:
-        res = tune(name, cache=False)
+        res = tuner.plan(name)
         b = res.best
         print(f"{name:12s} {b.block:5d} {str(b.fuse_fp):>5s} "
               f"{str(b.pipelined):>5s} {res.default_cost.cycles:12d} "
@@ -35,26 +36,27 @@ def main():
     sp = default_space(w)
     for knob in ("fuse_fp", "movers", "pipelined"):
         sp = sp.with_values(knob, (getattr(sp.default, knob),))
-    pinned = tune(w, problem=64 * w.max_block, space=sp, cache=False)
+    pinned = tuner.plan(w, problem=64 * w.max_block, space=sp)
     print(f"expf, knobs pinned to the paper's: tuned block = "
           f"{pinned.best.block} (Table I Max Block = "
           f"{TABLE_I['expf'].max_block})")
 
     print("\n— cluster operating point under a 350 mW cap (energy) —")
+    capped = Tuner(Target.homogeneous(power_cap_mw=350.0), cache=False)
     for name in ("expf", "montecarlo"):
-        res = select_operating_point(name, power_cap_mw=350.0, cache=False)
+        res = capped.operating_point(name)
         print(f"{name:12s} -> {res.best.point} x{res.best.n_cores} cores, "
               f"{res.best_cost.power_mw:.1f} mW, "
               f"{res.predicted_energy_saving:.2f}x energy vs nominal")
 
     print("\n— the persistent cache makes repeat calls free —")
     with tempfile.TemporaryDirectory() as d:
-        cache = TuneCache(os.path.join(d, "cache.json"))
+        cached = Tuner(cache=TuneCache(os.path.join(d, "cache.json")))
         t0 = time.perf_counter()
-        tune("softmax", cache=cache)
+        cached.plan("softmax")
         cold = time.perf_counter() - t0
         t0 = time.perf_counter()
-        hit = tune("softmax", cache=cache)
+        hit = cached.plan("softmax")
         warm = time.perf_counter() - t0
         print(f"cold search {cold * 1e3:.0f} ms -> cached {warm * 1e3:.2f} ms "
               f"(from_cache={hit.from_cache})")

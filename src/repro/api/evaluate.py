@@ -1,0 +1,160 @@
+"""``evaluate(spec, target)`` — THE cluster evaluation code path.
+
+This is the composition the paper's pipeline ends in (per-PE COPIFT x
+contention x DMA x DVFS), written once for the general case: a cluster of
+cores at per-core operating points, blocks shared by a weighted scheduling
+strategy.  A homogeneous cluster is the degenerate case where every
+per-core point coincides — the per-core clock-scale factor is then exactly
+1 and is *skipped*, so cycle counts stay exact integers and every figure
+reduces bit-for-bit to the pre-facade homogeneous results, which in turn
+reduce to the paper-calibrated single-PE numbers at one core (the
+invariant chain pinned by ``tests/test_cluster.py`` →
+``tests/test_het_cluster.py`` → ``tests/test_api.py``).
+
+The deprecated ``repro.cluster.evaluate_cluster`` /
+``evaluate_cluster_het`` shims both delegate here — they are one code
+path by construction, not by parallel maintenance.
+
+Like the single-PE model, this is a steady-state view: fill/drain and the
+end-of-kernel barrier are excluded (they vanish against any production
+problem size, cf. Fig. 3's convergence).
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+from repro.api.registry import KernelSpec, kernel
+from repro.api.target import Target
+from repro.cluster.contention import (baseline_extra_contention_het,
+                                      copift_extra_contention_het)
+from repro.cluster.dma import kernel_bytes, transfer_cycles
+from repro.cluster.dvfs import het_cluster_power_mw
+from repro.cluster.report import Report, headline  # noqa: F401  (re-export)
+from repro.cluster.scheduler import assign
+from repro.core.analytics import TABLE_I
+from repro.core.kernels_isa import baseline_trace, copift_schedule
+from repro.core.timing import baseline_timing, copift_block_timing
+
+
+@lru_cache(maxsize=None)
+def _copift_timing(name: str, block: int, extra_contention: float):
+    """Memoized discrete-event run — the simulator dominates sweep time and
+    (kernel, block, contention) triples repeat across points/core counts."""
+    return copift_block_timing(copift_schedule(name), block,
+                               extra_contention=extra_contention)
+
+
+@lru_cache(maxsize=None)
+def _baseline_timing(name: str, block: int, extra_contention: float):
+    return baseline_timing(baseline_trace(name), block,
+                           extra_contention=extra_contention)
+
+
+def _compute_cycles(timing_fn, name: str, block: int,
+                    extras: tuple[float, ...], blocks: tuple[int, ...],
+                    speeds: tuple[float, ...], f_ref: float):
+    """Reference-clock compute latency over the active cores, plus one
+    block's instruction count.  ``extras``/``blocks``/``speeds`` are
+    parallel over the *active* cores only.  Cores at the reference clock
+    contribute exact integer cycles (no x1.0 float round-trip) — the
+    homogeneous bit-for-bit reduction."""
+    latest = 0
+    instrs = 0
+    for extra, b, f in zip(extras, blocks, speeds):
+        bt = timing_fn(name, block, extra)
+        instrs = bt.instrs
+        c = bt.cycles * b
+        if f != f_ref:
+            c *= f_ref / f
+        latest = max(latest, c)
+    return latest, instrs
+
+
+def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
+             blocks_per_core: int = 1,
+             total_blocks: int | None = None) -> Report:
+    """Evaluate one kernel on one target; the facade's front door.
+
+    Weak scaling by default (``blocks_per_core`` blocks per core); pass
+    ``total_blocks`` for strong scaling (fixed work, split by the target's
+    strategy).  Every block is the kernel's Table-I max block, as in the
+    single-PE ``evaluate_kernel``.
+    """
+    spec = kernel(spec)
+    if not spec.simulatable:
+        raise ValueError(
+            f"kernel {spec.name!r} has no ISA schedule/baseline trace — it "
+            f"is tuner-only; evaluate() needs one of "
+            f"{[s.name for s in _simulatable()]}")
+    target = target or Target()
+    name = spec.isa_name
+    cfg = target.cluster
+
+    core_points = target.core_points
+    speeds = tuple(p.freq_ghz for p in core_points)
+    f_ref = max(speeds)
+    block = TABLE_I[name].max_block
+    if total_blocks is None:
+        total_blocks = blocks_per_core * cfg.n_cores
+    if total_blocks < 1:
+        raise ValueError(f"need at least one block of work, got "
+                         f"{total_blocks} (blocks_per_core={blocks_per_core})")
+    assignment = assign(total_blocks, speeds, target.strategy)
+
+    active = tuple(i for i, b in enumerate(assignment.blocks_per_core) if b)
+    act_speeds = tuple(speeds[i] for i in active)
+    act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
+    act_points = tuple(core_points[i] for i in active)
+    extras_c = copift_extra_contention_het(cfg, name, act_speeds)
+    extras_b = baseline_extra_contention_het(cfg, name, act_speeds)
+
+    compute_c, instrs_c = _compute_cycles(_copift_timing, name, block,
+                                          extras_c, act_blocks, act_speeds,
+                                          f_ref)
+    compute_b, instrs_b = _compute_cycles(_baseline_timing, name, block,
+                                          extras_b, act_blocks, act_speeds,
+                                          f_ref)
+    total_elems = block * total_blocks
+    transfer = transfer_cycles(cfg, kernel_bytes(name, total_elems))
+    cycles_c = max(compute_c, transfer)
+    cycles_b = max(compute_b, transfer)
+    uniform = len(set(speeds)) == 1
+
+    return Report(
+        name=name, strategy=target.strategy, core_points=core_points,
+        block=block, total_blocks=total_blocks, total_elems=total_elems,
+        blocks_per_core=assignment.blocks_per_core, ref_freq_ghz=f_ref,
+        cycles_base=cycles_b, cycles_copift=cycles_c,
+        instrs_base=instrs_b * total_blocks,
+        instrs_copift=instrs_c * total_blocks,
+        extra_contention=max(extras_c),
+        # unweighted max/mean on uniform cores (the historical homogeneous
+        # figure), makespan over the fluid optimum on mixed islands
+        imbalance=(assignment.imbalance if uniform
+                   else assignment.weighted_imbalance),
+        dma_bound=transfer > compute_c,
+        dma_utilization=(transfer / cycles_c if cycles_c else 0.0),
+        power_base_mw=het_cluster_power_mw(cfg, name, act_points,
+                                           copift=False),
+        power_copift_mw=het_cluster_power_mw(cfg, name, act_points,
+                                             copift=True))
+
+
+def _simulatable():
+    from repro.api.registry import specs
+    return [s for s in specs() if s.simulatable]
+
+
+def compare_strategies(spec: "KernelSpec | str", target: Target,
+                       strategies: tuple[str, ...] | None = None,
+                       blocks_per_core: int = 1,
+                       total_blocks: int | None = None
+                       ) -> dict[str, Report]:
+    """Evaluate every scheduling strategy on the same target — how much of
+    the speed-blind block-cyclic tail each one recovers."""
+    from repro.cluster.scheduler import STRATEGIES
+    return {s: evaluate(spec, target.with_strategy(s),
+                        blocks_per_core=blocks_per_core,
+                        total_blocks=total_blocks)
+            for s in (strategies or STRATEGIES)}

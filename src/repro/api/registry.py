@@ -1,0 +1,208 @@
+"""``KernelSpec`` — kernels as registry objects instead of bare strings.
+
+Pre-facade, "which kernel" was a stringly-typed argument whose meaning
+depended on the consumer: the cluster machinery wanted a
+``core.kernels_isa`` registry name (``"pi_xoshiro128p"``), the tuner a
+``tune.workloads`` name (``"montecarlo"``), and the jit'd entry points a
+function in ``kernels.ops`` — with the mapping between the three living in
+people's heads.  A ``KernelSpec`` binds all three views of one kernel
+(ISA schedule, tunable workload, runnable implementation) plus its default
+problem size, and the registry resolves any of the historical names to the
+same spec.
+
+User kernels register through :func:`register_kernel`; the spec's
+callables are dotted references resolved lazily, so registering (and
+importing this module) never pulls in jax.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+
+from repro.core.analytics import TABLE_I
+from repro.core.kernels_isa import KERNELS as ISA_KERNELS
+
+
+def _resolve_ref(ref: str):
+    """``"pkg.mod:attr"`` -> the attribute, imported on first use."""
+    mod, _, attr = ref.partition(":")
+    if not mod or not attr:
+        raise ValueError(f"bad callable reference {ref!r}: expected "
+                         f"'package.module:attribute'")
+    return getattr(importlib.import_module(mod), attr)
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """One kernel, every view of it.
+
+    ``isa_name``   name in the ``core.kernels_isa`` registry — what the
+                   calibrated timing/energy/cluster machinery simulates
+                   (``None`` for tuner-only kernels like ``prng``);
+    ``workload``   name in the ``tune.workloads`` registry — what the
+                   autotuner prices (``None`` for kernels without a
+                   tunable schedule, e.g. the LCG Monte-Carlo variants);
+    ``op``         dotted reference to the jit'd entry point
+                   (``"repro.kernels.ops:exp"``), resolved lazily;
+    ``reference``  dotted reference to the pure-jnp oracle.
+    """
+    name: str
+    isa_name: str | None = None
+    workload: str | None = None
+    op: str | None = None
+    reference: str | None = None
+    default_problem: int = 1 << 14
+    doc: str = ""
+    aliases: tuple[str, ...] = field(default_factory=tuple)
+
+    def __post_init__(self):
+        if self.isa_name is not None and self.isa_name not in ISA_KERNELS:
+            raise ValueError(f"isa_name {self.isa_name!r} is not in the ISA "
+                             f"registry; known: {sorted(ISA_KERNELS)}")
+
+    # -- capability probes --------------------------------------------------
+
+    @property
+    def simulatable(self) -> bool:
+        """Can ``repro.api.evaluate`` run this spec (ISA schedule + RV32G
+        baseline trace + Table-I block cap)?"""
+        return self.isa_name is not None
+
+    @property
+    def tunable(self) -> bool:
+        """Can ``repro.api.Tuner`` search plans for this spec?"""
+        return self.workload is not None
+
+    @property
+    def max_block(self) -> int:
+        """Step-4 block-size cap (Table I for ISA kernels, the workload's
+        L1-budget derivation otherwise)."""
+        if self.isa_name is not None:
+            return TABLE_I[self.isa_name].max_block
+        return self.get_workload().max_block
+
+    # -- bound machinery ----------------------------------------------------
+
+    def schedule(self):
+        """The COPIFT ``CopiftSchedule`` (ISA view when available, else the
+        workload's synthetic schedule)."""
+        if self.isa_name is not None:
+            from repro.core.kernels_isa import copift_schedule
+            return copift_schedule(self.isa_name)
+        return self.get_workload().schedule()
+
+    def get_workload(self):
+        """The bound ``tune.workloads.Workload``.  Raises ``KeyError`` for
+        untunable kernels — the same failure class as an unknown workload
+        name, so tune-optional consumers catch one exception."""
+        if self.workload is None:
+            raise KeyError(
+                f"kernel {self.name!r} has no tunable workload; tunable "
+                f"kernels: {[s.name for s in specs() if s.tunable]}")
+        from repro.tune.workloads import get_workload
+        return get_workload(self.workload)
+
+    def run(self, *args, **kwargs):
+        """Call the jit'd entry point (Pallas on TPU, reference elsewhere,
+        per the active ``repro.api.config`` overrides)."""
+        if self.op is None:
+            raise ValueError(f"kernel {self.name!r} has no runnable entry "
+                             f"point (model-only kernel)")
+        return _resolve_ref(self.op)(*args, **kwargs)
+
+    def ref(self, *args, **kwargs):
+        """Call the pure-jnp reference oracle."""
+        if self.reference is None:
+            raise ValueError(f"kernel {self.name!r} has no reference "
+                             f"implementation")
+        return _resolve_ref(self.reference)(*args, **kwargs)
+
+
+#: The built-in registry: the paper's six evaluated kernels plus the two
+#: serving-path kernels (``prng``, ``softmax``) the tuner knows.
+_BUILTINS = (
+    KernelSpec("expf", isa_name="expf", workload="expf",
+               op="repro.kernels.ops:exp", reference="repro.kernels.ref:exp_ref",
+               doc="glibc-expf-style exponential (streaming)"),
+    KernelSpec("logf", isa_name="logf", workload="logf",
+               op="repro.kernels.ops:log", reference="repro.kernels.ref:log_ref",
+               doc="glibc-logf-style logarithm (ISSR table gather)"),
+    KernelSpec("poly_lcg", isa_name="poly_lcg",
+               doc="polynomial-integral MC, LCG PRNG (in-core)"),
+    KernelSpec("pi_lcg", isa_name="pi_lcg",
+               doc="pi hit-and-miss MC, LCG PRNG (in-core)"),
+    KernelSpec("poly_xoshiro128p", isa_name="poly_xoshiro128p",
+               op="repro.kernels.ops:mc_poly",
+               doc="polynomial-integral MC, xoshiro128+ PRNG"),
+    KernelSpec("pi_xoshiro128p", isa_name="pi_xoshiro128p",
+               workload="montecarlo", op="repro.kernels.ops:mc_pi",
+               aliases=("montecarlo",),
+               doc="pi hit-and-miss MC, xoshiro128+ PRNG (Table-I hardest)"),
+    KernelSpec("prng", workload="prng", op="repro.kernels.ops:uniform",
+               reference="repro.kernels.ref:prng_uniform",
+               doc="counter-based uniforms (serving-path sampling)"),
+    KernelSpec("softmax", workload="softmax", op="repro.kernels.ops:softmax",
+               reference="repro.kernels.ref:softmax_ref",
+               doc="attention softmax (expf phases + normalization)"),
+)
+
+_REGISTRY: dict[str, KernelSpec] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_kernel(spec: KernelSpec, overwrite: bool = False) -> KernelSpec:
+    """Add a user kernel to the registry (the extension hook).
+
+    The spec's ``name`` and every entry of ``aliases`` become resolvable
+    through :func:`kernel`.  Re-registering an existing name requires
+    ``overwrite=True`` — a silent clobber would let two subsystems disagree
+    about what a name means, which is the failure mode this registry
+    replaces.
+    """
+    taken = ({spec.name, *spec.aliases}
+             & (set(_REGISTRY) | set(_ALIASES)))
+    if taken and not overwrite:
+        raise ValueError(f"kernel name(s) {sorted(taken)} already "
+                         f"registered; pass overwrite=True to replace")
+    # Purge every stale mapping the new spec shadows: the name/aliases it
+    # claims, and the replaced spec's own old aliases — otherwise a stale
+    # alias could silently resolve past the new registration (the exact
+    # two-subsystems-disagree failure this registry exists to prevent).
+    for name in (spec.name, *spec.aliases):
+        _ALIASES.pop(name, None)
+        _REGISTRY.pop(name, None)
+    for alias in [a for a, target in _ALIASES.items()
+                  if target == spec.name]:
+        del _ALIASES[alias]
+    _REGISTRY[spec.name] = spec
+    for a in spec.aliases:
+        _ALIASES[a] = spec.name
+    return spec
+
+
+for _s in _BUILTINS:
+    register_kernel(_s)
+del _s
+
+
+def kernel(name: "str | KernelSpec") -> KernelSpec:
+    """Resolve a kernel by any of its names (pass-through for specs)."""
+    if isinstance(name, KernelSpec):
+        return name
+    key = _ALIASES.get(name, name)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        known = sorted(set(_REGISTRY) | set(_ALIASES))
+        raise KeyError(f"no kernel {name!r} in the registry; "
+                       f"known: {known}") from None
+
+
+def kernels() -> tuple[str, ...]:
+    """Registered kernel names (canonical, no aliases)."""
+    return tuple(_REGISTRY)
+
+
+def specs() -> tuple[KernelSpec, ...]:
+    return tuple(_REGISTRY.values())

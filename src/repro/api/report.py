@@ -1,0 +1,11 @@
+"""Public home of the unified evaluation result.
+
+The implementation lives in ``repro.cluster.report`` (an import-cycle-free
+leaf both ``repro.cluster`` and ``repro.api`` can reach); this module is
+the facade's canonical name for it — consumers should import ``Report`` /
+``ReportMetrics`` from ``repro.api``.
+"""
+
+from repro.cluster.report import Report, ReportMetrics, headline
+
+__all__ = ["Report", "ReportMetrics", "headline"]

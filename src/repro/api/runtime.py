@@ -1,0 +1,35 @@
+"""Scoped runtime configuration — ``repro.api.config``.
+
+The kernels' impl dispatch (``auto``/``pallas``/``reference``) and the
+tuned-tiling defaults used to be module-level mutable globals toggled by
+``set_default_impl``/``enable_tuned_defaults`` — process-wide state that
+concurrent benchmarks could race and that leaked across test boundaries.
+``config`` is the replacement: a context manager over ContextVars, so the
+override is visible exactly within the ``with`` block (and within the
+current thread/task — a parallel benchmark keeps its own view):
+
+    with repro.api.config(impl="reference", tuned_defaults=True):
+        y = repro.api.kernel("expf").run(x)
+
+The import of the kernel stack (and therefore jax) is deferred to the
+first use, so ``import repro.api`` stays cheap for model-only consumers.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+
+@contextlib.contextmanager
+def config(impl: str | None = None, tuned_defaults: bool | None = None):
+    """Scoped kernel-runtime override.
+
+    ``impl``            'auto' | 'pallas' | 'reference' kernel dispatch;
+    ``tuned_defaults``  let ``repro.tune`` pick default block tilings.
+
+    ``None`` leaves a setting untouched.  Settings restore on exit even on
+    error; nesting composes (inner scopes win).
+    """
+    from repro.kernels import ops as kops
+    with kops.overrides(impl=impl, tuned_defaults=tuned_defaults):
+        yield

@@ -1,0 +1,187 @@
+"""``Tuner`` — one object over the three historical tuner front doors.
+
+``repro.tune`` grew three parallel entry points — ``tune`` (joint plan
+search), ``select_block`` (block-only, for consumers that can only act on
+the tiling) and ``select_operating_point`` (cores x DVFS under a power
+cap) — each threading its own ``cache=``/``cfg=``/``power_cap_mw=``
+through every call.  A ``Tuner`` binds that context once (a
+:class:`~repro.api.Target` and one cache object) and exposes the searches
+as methods sharing the same persistent cache and the same memoized cost
+oracle (``tune.cost.evaluate``):
+
+    tuner = Tuner(Target.homogeneous(power_cap_mw=250.0))
+    tuner.plan("softmax")                       # joint plan knobs
+    tuner.block("expf")                         # tiling-only
+    tuner.operating_point("expf", heterogeneous=True,
+                          per_island_blocks=True)
+
+``per_island_blocks=True`` is new capability, not just packaging: after
+the joint islands x strategy search it refines the winning layout with
+*per-island block sizes* (PR 3 left all islands sharing one block knob).
+The shared-block winner stays in the comparison pool — and a uniform
+per-island assignment canonicalizes onto it in the cost oracle — so the
+refined pick never scores worse than the shared-block plan under the same
+power cap (asserted in ``tests/test_api.py``).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import replace as _dc_replace
+
+from repro.api.registry import KernelSpec, kernel
+from repro.api.target import Target
+from repro.tune import cache as _tune_cache
+from repro.tune.cost import evaluate as _cost_evaluate
+from repro.tune.cost import objective_value
+from repro.tune.search import (TuneResult, select_block,
+                               select_operating_point, tune)
+from repro.tune.space import block_ladder
+from repro.tune.workloads import Workload, get_workload
+
+
+class Tuner:
+    """Model-guided search bound to one target and one cache.
+
+    ``objective=None`` (default) keeps each method's historical default —
+    ``cycles`` for the plan/block searches, ``energy`` for operating-point
+    selection (cycles are frequency-independent, so they cannot rank DVFS
+    points); an explicit objective binds all three methods alike.
+    ``cache=None`` (default) shares the persistent process-wide cache;
+    ``cache=False`` disables persistence; a ``TuneCache`` instance targets
+    a specific file.  Every method funnels through the same cache object
+    and the same in-process cost-oracle memo table.
+    """
+
+    def __init__(self, target: Target | None = None,
+                 objective: str | None = None,
+                 cache: "_tune_cache.TuneCache | None | bool" = None):
+        self.target = target or Target()
+        self.objective = objective
+        self._cache = cache
+
+    @property
+    def cache(self) -> "_tune_cache.TuneCache | bool":
+        """The bound store; the shared default resolves lazily so a
+        changed ``$REPRO_TUNE_CACHE`` is honored (as the old front doors
+        did per-call)."""
+        if self._cache is None or self._cache is True:
+            return _tune_cache.default_cache()
+        return self._cache
+
+    def __repr__(self):
+        return (f"Tuner(n_cores={self.target.n_cores}, "
+                f"objective={self.objective!r}, "
+                f"power_cap_mw={self.target.power_cap_mw})")
+
+    # -- spec resolution ----------------------------------------------------
+
+    @staticmethod
+    def _workload(spec: "KernelSpec | Workload | str") -> Workload:
+        if isinstance(spec, Workload):
+            return spec
+        if isinstance(spec, str):
+            try:
+                spec = kernel(spec)
+            except KeyError:
+                # Not a registry kernel — fall through to the raw workload
+                # registry so pre-facade call sites keep working.
+                return get_workload(spec)
+        return spec.get_workload()
+
+    # -- searches -----------------------------------------------------------
+
+    def plan(self, spec: "KernelSpec | Workload | str",
+             problem: int | None = None, objective: str | None = None,
+             cluster: bool = False, space=None,
+             measure_top_k: int = 0) -> TuneResult:
+        """Joint plan-knob search (block, fusion, movers, pipelining; plus
+        cores x DVFS when ``cluster=True``) — the old ``tune()``."""
+        return tune(self._workload(spec), problem=problem,
+                    objective=objective or self.objective or "cycles",
+                    cfg=self.target.cluster, cluster=cluster,
+                    power_cap_mw=self.target.power_cap_mw,
+                    space=space, cache=self.cache,
+                    measure_top_k=measure_top_k)
+
+    def block(self, spec: "KernelSpec | Workload | str",
+              objective: str | None = None,
+              problem: int | None = None) -> TuneResult:
+        """Block-size-only search, every other knob at its static default —
+        what tiling-only consumers (``kernels.ops`` defaults,
+        ``copift.make_plan(tune=True)``) must use."""
+        return select_block(self._workload(spec),
+                            objective=objective or self.objective
+                            or "cycles",
+                            problem=problem, cfg=self.target.cluster,
+                            cache=self.cache)
+
+    def operating_point(self, spec: "KernelSpec | Workload | str",
+                        n_cores: int | None = None,
+                        objective: str | None = None,
+                        heterogeneous: bool = False,
+                        max_islands: int = 2,
+                        per_island_blocks: bool = False) -> TuneResult:
+        """Cluster operating-point selection under the target's power cap.
+
+        ``heterogeneous=True`` searches DVFS-island layouts and weighted
+        scheduling strategies (a strict superset of the homogeneous
+        ladder); ``per_island_blocks=True`` additionally refines the
+        winning multi-island layout with per-island block sizes.
+        """
+        objective = objective or self.objective or "energy"
+        res = select_operating_point(
+            self._workload(spec), cfg=self.target.cluster,
+            n_cores=n_cores if n_cores is not None else self.target.n_cores,
+            power_cap_mw=self.target.power_cap_mw, objective=objective,
+            cache=self.cache, heterogeneous=heterogeneous,
+            max_islands=max_islands)
+        if per_island_blocks and len(res.best.islands) > 1:
+            res = self._refine_island_blocks(spec, res, objective)
+        return res
+
+    def _refine_island_blocks(self, spec, res: TuneResult,
+                              objective: str) -> TuneResult:
+        """Per-island block refinement of a heterogeneous winner.
+
+        Enumerates the block ladder independently per island of the
+        winning layout and keeps the best *feasible* candidate; the
+        shared-block winner is in the pool (uniform tuples canonicalize
+        onto it), so the result never scores worse under the same cap.
+        Cheap by construction — ladder^islands is ~25 oracle calls, all
+        memoized — so it runs after the (persistent-cached) layout search
+        rather than widening its keyed space.
+        """
+        w = self._workload(spec)
+        cap = self.target.power_cap_mw
+        ladder = block_ladder(w.max_block)
+        best_cand, best_cost = res.best, res.best_cost
+        n_extra = 0
+        for combo in itertools.product(ladder,
+                                       repeat=len(res.best.islands)):
+            # Store uniform combos in canonical shared-block form (the
+            # same rule the cost oracle applies), so a winner's .block
+            # field never contradicts its island_blocks — consumers that
+            # only read .block (the kernels' tiling defaults) stay honest.
+            if len(set(combo)) == 1:
+                cand = _dc_replace(res.best, block=combo[0],
+                                   island_blocks=())
+            else:
+                cand = _dc_replace(res.best, island_blocks=combo)
+            cost = _cost_evaluate(w, cand, res.problem,
+                                  self.target.cluster, cap)
+            n_extra += 1
+            # Feasible beats infeasible; within a class, the objective
+            # decides (sort_key breaks ties toward the shared plan).
+            if ((not cost.feasible, objective_value(cost, objective),
+                 cand.sort_key())
+                    < (not best_cost.feasible,
+                       objective_value(best_cost, objective),
+                       best_cand.sort_key())):
+                best_cand, best_cost = cand, cost
+        if best_cand == res.best:
+            return res
+        return _dc_replace(res, best=best_cand, best_cost=best_cost,
+                           method=res.method + "+island_blocks",
+                           n_evaluated=res.n_evaluated + n_extra,
+                           from_cache=False)

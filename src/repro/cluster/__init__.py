@@ -14,9 +14,12 @@ Layer map (mirrors ``repro.core``'s):
   heterogeneous cores
 * ``dvfs``        — operating-point power scaling (dyn ∝ f·V², leak ∝ V²)
   and the energy-optimal-point search under a cluster power cap
-* ``analytics``   — ``evaluate_cluster`` composition, strong/weak scaling
-  curves, cluster roofline, fig2-style aggregates, and
-  ``evaluate_cluster_het`` for DVFS-island (big.LITTLE-style) clusters
+* ``report``      — the unified ``Report`` result object (public name
+  ``repro.api.Report``) with every derived metric defined once
+* ``analytics``   — strong/weak scaling curves, cluster roofline,
+  fig2-style aggregates, and the deprecated ``evaluate_cluster`` /
+  ``evaluate_cluster_het`` shims over the single ``repro.api.evaluate``
+  code path (DVFS-island/big.LITTLE clusters are the general case there)
 
 Invariant (pinned in ``tests/test_cluster.py``): at one core, nominal DVFS
 and zero contention the cluster results equal the single-PE
@@ -32,6 +35,7 @@ from repro.cluster.analytics import (ClusterKernelResult, HetClusterResult,
                                      evaluate_cluster_het, headline,
                                      scaling_efficiency, strong_scaling,
                                      weak_scaling)
+from repro.cluster.report import Report, ReportMetrics
 from repro.cluster.contention import (AccessProfile, baseline_profile,
                                       baseline_extra_contention,
                                       baseline_extra_contention_het,
@@ -50,6 +54,7 @@ from repro.cluster.topology import (NOMINAL_POINT, OPERATING_POINTS,
                                     OperatingPoint, parse_islands)
 
 __all__ = [
+    "Report", "ReportMetrics",
     "ClusterKernelResult", "HetClusterResult", "RooflinePoint",
     "cluster_roofline", "compare_strategies", "evaluate_cluster",
     "evaluate_cluster_het", "headline", "scaling_efficiency",

@@ -1,331 +1,110 @@
-"""Cluster-level evaluation: per-PE COPIFT × contention × DMA × DVFS.
+"""Cluster-level evaluation — pre-facade entry points, now thin shims.
 
-The composition contract (pinned by ``tests/test_cluster.py``): at
-``n_cores=1``, the nominal operating point and therefore zero inter-core
-contention, every number here reduces *bit-for-bit* to the single-PE
-machinery (``core.timing.evaluate_kernel`` / ``core.energy``) — the
-paper-calibrated reproduction stays the ground truth and the cluster model
-is a strict extension, charging only real cluster effects on top:
+The composition itself (per-PE COPIFT x contention x DMA x DVFS) lives in
+``repro.api.evaluate`` as ONE code path in which a homogeneous cluster is
+the degenerate (uniform-points) case of the heterogeneous one.  This
+module keeps the historical surface alive on top of it:
 
-* inter-core TCDM bank conflicts    (``cluster.contention``)
-* shared-DMA refill bandwidth       (``cluster.dma``; double-buffered, so
-                                     ``max(compute, transfer)``)
-* block-cyclic load imbalance       (``cluster.scheduler``)
-* operating-point power scaling     (``cluster.dvfs``)
+* ``evaluate_cluster`` / ``evaluate_cluster_het`` — deprecated shims that
+  build the equivalent :class:`repro.api.Target` and delegate; their
+  numbers stay bit-for-bit what ``tests/test_cluster.py`` /
+  ``tests/test_het_cluster.py`` pinned before the facade (a hard
+  requirement, re-asserted kernel-by-kernel in ``tests/test_api.py``).
+* ``ClusterKernelResult`` / ``HetClusterResult`` — deprecated aliases of
+  the unified :class:`repro.api.Report`; the metric properties the two
+  classes used to copy-paste are defined once on its
+  ``ReportMetrics`` mixin.
+* scaling curves, the cluster roofline and the ``headline`` aggregates —
+  still supported (not deprecated), delegating to the facade internally.
 
-Like ``evaluate_kernel``, this is a steady-state model: fill/drain and the
+Like the single-PE model this is steady-state: fill/drain and the
 end-of-kernel barrier are excluded (they vanish against any production
 problem size, cf. Fig. 3's convergence).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import lru_cache
+import warnings
+from dataclasses import dataclass, replace
 
-from repro.cluster import contention as _contention
-from repro.cluster import dma as _dma
-from repro.cluster import dvfs as _dvfs
-from repro.cluster.scheduler import (STRATEGIES, assign, block_cyclic,
-                                     cluster_compute_cycles)
-from repro.cluster.topology import (NOMINAL_POINT, ClusterConfig,
-                                    OperatingPoint, SNITCH_CLUSTER)
-from repro.core.analytics import TABLE_I, geomean
-from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
-from repro.core.timing import baseline_timing, copift_block_timing
+from repro.cluster.report import Report, headline  # noqa: F401  (re-export)
+from repro.cluster.scheduler import STRATEGIES
+from repro.cluster.topology import (NOMINAL_POINT, SNITCH_CLUSTER,
+                                    ClusterConfig, OperatingPoint)
+from repro.core.kernels_isa import KERNELS, copift_schedule
 
-
-@lru_cache(maxsize=None)
-def _copift_timing(name: str, block: int, extra_contention: float):
-    """Memoized discrete-event run — the simulator dominates sweep time and
-    (kernel, block, contention) triples repeat across points/core counts."""
-    return copift_block_timing(copift_schedule(name), block,
-                               extra_contention=extra_contention)
+#: Deprecated aliases: both historical result classes are the one Report.
+ClusterKernelResult = Report
+HetClusterResult = Report
 
 
-@lru_cache(maxsize=None)
-def _baseline_timing(name: str, block: int, extra_contention: float):
-    return baseline_timing(baseline_trace(name), block,
-                           extra_contention=extra_contention)
+def _facade():
+    """``(evaluate, Target)`` resolved lazily: importing ``repro.api`` at
+    module level would recurse — this module is itself imported by the
+    ``repro.cluster`` package init the facade's imports trigger."""
+    from repro.api.evaluate import evaluate
+    from repro.api.target import Target
+    return evaluate, Target
 
 
-@dataclass(frozen=True)
-class ClusterKernelResult:
-    """One (kernel × core count × operating point) evaluation."""
-    name: str
-    n_cores: int
-    point: OperatingPoint
-    block: int
-    total_blocks: int
-    total_elems: int
-    # cluster cycle counts (frequency-independent)
-    cycles_base: int
-    cycles_copift: int
-    instrs_base: int
-    instrs_copift: int
-    # model diagnostics
-    extra_contention: float       # stalls/access charged by the bank model
-    imbalance: float              # max/mean core load
-    dma_bound: bool
-    dma_utilization: float
-    # power at the operating point (mW, whole cluster)
-    power_base_mw: float
-    power_copift_mw: float
-
-    @property
-    def speedup(self) -> float:
-        """COPIFT cluster vs RV32G cluster, same core count and point."""
-        return self.cycles_base / self.cycles_copift
-
-    @property
-    def ipc_base(self) -> float:
-        return self.instrs_base / self.cycles_base
-
-    @property
-    def ipc_copift(self) -> float:
-        """Cluster-aggregate IPC (can exceed n_cores on dual-issue PEs)."""
-        return self.instrs_copift / self.cycles_copift
-
-    @property
-    def power_ratio(self) -> float:
-        return self.power_copift_mw / self.power_base_mw
-
-    @property
-    def energy_saving(self) -> float:
-        """E_base / E_copift = speedup / power ratio (same point)."""
-        return self.speedup / self.power_ratio
-
-    @property
-    def time_us(self) -> float:
-        return self.cycles_copift / self.point.freq_ghz * 1e-3
-
-    @property
-    def cycles_per_elem(self) -> float:
-        return self.cycles_copift / self.total_elems
-
-    @property
-    def energy_pj_per_elem(self) -> float:
-        """Cluster COPIFT energy per element at the operating point."""
-        t_ns = self.cycles_per_elem / self.point.freq_ghz
-        return self.power_copift_mw * t_ns
+def _homogeneous_target(cfg: ClusterConfig, n_cores: int | None,
+                        point: OperatingPoint):
+    """The target ``evaluate_cluster`` historically meant: ``n_cores``
+    cores of ``cfg``'s shared resources, every core at ``point`` (any
+    island layout ignored, exactly as the old code path did)."""
+    _, Target = _facade()
+    n = cfg.n_cores if n_cores is None else n_cores
+    if n != cfg.n_cores or cfg.islands is not None:
+        cfg = replace(cfg, n_cores=n, islands=None)
+    return Target(cluster=cfg, point=point)
 
 
 def evaluate_cluster(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
                      n_cores: int | None = None,
                      point: OperatingPoint = NOMINAL_POINT,
                      blocks_per_core: int = 1,
-                     total_blocks: int | None = None) -> ClusterKernelResult:
-    """Evaluate one kernel on the cluster.
+                     total_blocks: int | None = None) -> Report:
+    """Deprecated: use ``repro.api.evaluate(name, Target.homogeneous(...))``.
 
     Weak scaling by default (``blocks_per_core`` blocks per core); pass
     ``total_blocks`` for strong scaling (fixed work, block-cyclic split).
-    Every block is the kernel's Table-I max block, as in ``evaluate_kernel``.
     """
-    n_cores = cfg.n_cores if n_cores is None else n_cores
-    row = TABLE_I[name]
-    block = row.max_block
-    if total_blocks is None:
-        total_blocks = blocks_per_core * n_cores
-    if total_blocks < 1:
-        raise ValueError(f"need at least one block of work, got "
-                         f"{total_blocks} (blocks_per_core={blocks_per_core})")
-    assignment = block_cyclic(total_blocks, n_cores)
-    # Contention sees steady-state occupancy (round 0: all loaded cores).
-    n_active = assignment.cores_active(0)
-    extra_c = _contention.copift_extra_contention(cfg, name, n_active)
-    extra_b = _contention.baseline_extra_contention(cfg, name, n_active)
-
-    ct = _copift_timing(name, block, extra_c)
-    bt = _baseline_timing(name, block, extra_b)
-
-    compute_c = cluster_compute_cycles(ct.cycles, assignment)
-    compute_b = cluster_compute_cycles(bt.cycles, assignment)
-    total_elems = block * total_blocks
-    dma_c = _dma.cluster_dma_timing(cfg, name, total_elems, compute_c)
-    dma_b = _dma.cluster_dma_timing(cfg, name, total_elems, compute_b)
-
-    return ClusterKernelResult(
-        name=name, n_cores=n_cores, point=point, block=block,
-        total_blocks=total_blocks, total_elems=total_elems,
-        cycles_base=dma_b.overlapped_cycles,
-        cycles_copift=dma_c.overlapped_cycles,
-        instrs_base=bt.instrs * total_blocks,
-        instrs_copift=ct.instrs * total_blocks,
-        extra_contention=extra_c,
-        imbalance=assignment.imbalance,
-        dma_bound=dma_c.dma_bound,
-        dma_utilization=dma_c.dma_utilization,
-        power_base_mw=_dvfs.cluster_power_mw(cfg, name, n_active, point,
-                                             copift=False),
-        power_copift_mw=_dvfs.cluster_power_mw(cfg, name, n_active, point,
-                                               copift=True))
-
-
-# ---------------------------------------------------------------------------
-# Heterogeneous clusters (DVFS islands)
-# ---------------------------------------------------------------------------
-
-@dataclass(frozen=True)
-class HetClusterResult:
-    """One kernel evaluated on a cluster whose cores may sit at different
-    operating points (DVFS islands).
-
-    Cycle counts are expressed in *reference-clock cycles* — cycles of the
-    fastest core's domain, with slower cores' work scaled by the frequency
-    ratio.  When every core shares one point the ratio is exactly 1.0, so
-    each figure equals the homogeneous ``ClusterKernelResult``'s bit-for-bit
-    (the reduction invariant, pinned in ``tests/test_het_cluster.py``).
-    """
-    name: str
-    strategy: str
-    core_points: tuple[OperatingPoint, ...]
-    block: int
-    total_blocks: int
-    total_elems: int
-    blocks_per_core: tuple[int, ...]
-    ref_freq_ghz: float           # the fastest domain (uncore/DMA clock)
-    # reference-clock cycle counts (floats: slower cores scale by f_ref/f_i)
-    cycles_base: float
-    cycles_copift: float
-    instrs_base: int
-    instrs_copift: int
-    # model diagnostics
-    extra_contention: float       # worst per-core stalls/access surcharge
-    imbalance: float              # weighted makespan over fluid optimum
-    dma_bound: bool
-    dma_utilization: float
-    # power of the active cores at their own points (mW, whole cluster)
-    power_base_mw: float
-    power_copift_mw: float
-
-    @property
-    def n_cores(self) -> int:
-        return len(self.core_points)
-
-    @property
-    def speedup(self) -> float:
-        return self.cycles_base / self.cycles_copift
-
-    @property
-    def ipc_base(self) -> float:
-        return self.instrs_base / self.cycles_base
-
-    @property
-    def ipc_copift(self) -> float:
-        """Cluster-aggregate IPC in reference-clock cycles."""
-        return self.instrs_copift / self.cycles_copift
-
-    @property
-    def power_ratio(self) -> float:
-        return self.power_copift_mw / self.power_base_mw
-
-    @property
-    def energy_saving(self) -> float:
-        return self.speedup / self.power_ratio
-
-    @property
-    def time_us(self) -> float:
-        return self.cycles_copift / self.ref_freq_ghz * 1e-3
-
-    @property
-    def cycles_per_elem(self) -> float:
-        return self.cycles_copift / self.total_elems
-
-    @property
-    def energy_pj_per_elem(self) -> float:
-        t_ns = self.cycles_per_elem / self.ref_freq_ghz
-        return self.power_copift_mw * t_ns
-
-
-def _het_compute_cycles(timing_fn, name: str, block: int,
-                        extras: tuple[float, ...],
-                        blocks: tuple[int, ...],
-                        speeds: tuple[float, ...],
-                        f_ref: float) -> tuple[float, int]:
-    """Reference-clock compute latency over the active cores, plus one
-    block's instruction count.  ``extras``/``blocks``/``speeds`` are
-    parallel over the *active* cores only."""
-    latest = 0.0
-    instrs = 0
-    for extra, b, f in zip(extras, blocks, speeds):
-        bt = timing_fn(name, block, extra)
-        instrs = bt.instrs
-        latest = max(latest, (bt.cycles * b) * (f_ref / f))
-    return latest, instrs
+    warnings.warn("evaluate_cluster is deprecated; use repro.api.evaluate("
+                  "spec, Target.homogeneous(...))", DeprecationWarning,
+                  stacklevel=2)
+    ev, _ = _facade()
+    return ev(name, _homogeneous_target(cfg, n_cores, point),
+              blocks_per_core=blocks_per_core, total_blocks=total_blocks)
 
 
 def evaluate_cluster_het(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
                          strategy: str = "lpt",
                          point: OperatingPoint = NOMINAL_POINT,
                          blocks_per_core: int = 1,
-                         total_blocks: int | None = None) -> HetClusterResult:
-    """Evaluate one kernel on a (possibly) heterogeneous cluster.
-
-    Per-core operating points come from ``cfg.islands``; a config without
-    islands runs every core at ``point`` (and then this function reproduces
-    ``evaluate_cluster`` exactly, for every strategy).  Work is split by
-    ``strategy`` (see ``cluster.scheduler.assign``) with core speeds taken
-    as the island frequencies.
-    """
-    core_points = cfg.core_points(point)
-    speeds = tuple(p.freq_ghz for p in core_points)
-    f_ref = max(speeds)
-    row = TABLE_I[name]
-    block = row.max_block
-    if total_blocks is None:
-        total_blocks = blocks_per_core * cfg.n_cores
-    if total_blocks < 1:
-        raise ValueError(f"need at least one block of work, got "
-                         f"{total_blocks} (blocks_per_core={blocks_per_core})")
-    assignment = assign(total_blocks, speeds, strategy)
-
-    active = tuple(i for i, b in enumerate(assignment.blocks_per_core) if b)
-    act_speeds = tuple(speeds[i] for i in active)
-    act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
-    act_points = tuple(core_points[i] for i in active)
-    extras_c = _contention.copift_extra_contention_het(cfg, name, act_speeds)
-    extras_b = _contention.baseline_extra_contention_het(cfg, name,
-                                                         act_speeds)
-
-    compute_c, instrs_c = _het_compute_cycles(_copift_timing, name, block,
-                                              extras_c, act_blocks,
-                                              act_speeds, f_ref)
-    compute_b, instrs_b = _het_compute_cycles(_baseline_timing, name, block,
-                                              extras_b, act_blocks,
-                                              act_speeds, f_ref)
-    total_elems = block * total_blocks
-    transfer = _dma.transfer_cycles(cfg, _dma.kernel_bytes(name, total_elems))
-    cycles_c = max(compute_c, transfer)
-    cycles_b = max(compute_b, transfer)
-
-    return HetClusterResult(
-        name=name, strategy=strategy, core_points=core_points, block=block,
-        total_blocks=total_blocks, total_elems=total_elems,
-        blocks_per_core=assignment.blocks_per_core, ref_freq_ghz=f_ref,
-        cycles_base=cycles_b, cycles_copift=cycles_c,
-        instrs_base=instrs_b * total_blocks,
-        instrs_copift=instrs_c * total_blocks,
-        extra_contention=max(extras_c),
-        imbalance=assignment.weighted_imbalance,
-        dma_bound=transfer > compute_c,
-        dma_utilization=(transfer / cycles_c if cycles_c else 0.0),
-        power_base_mw=_dvfs.het_cluster_power_mw(cfg, name, act_points,
-                                                 copift=False),
-        power_copift_mw=_dvfs.het_cluster_power_mw(cfg, name, act_points,
-                                                   copift=True))
+                         total_blocks: int | None = None) -> Report:
+    """Deprecated: use ``repro.api.evaluate`` with a (heterogeneous)
+    ``Target`` — per-core operating points come from ``cfg.islands``, a
+    config without islands runs every core at ``point``."""
+    warnings.warn("evaluate_cluster_het is deprecated; use "
+                  "repro.api.evaluate(spec, Target(cluster=cfg, "
+                  "strategy=...))", DeprecationWarning, stacklevel=2)
+    ev, Target = _facade()
+    return ev(name, Target(cluster=cfg, point=point, strategy=strategy),
+              blocks_per_core=blocks_per_core, total_blocks=total_blocks)
 
 
 def compare_strategies(name: str, cfg: ClusterConfig,
                        strategies: tuple[str, ...] = STRATEGIES,
                        blocks_per_core: int = 1,
                        total_blocks: int | None = None
-                       ) -> dict[str, HetClusterResult]:
+                       ) -> dict[str, Report]:
     """Evaluate every scheduling strategy on the same heterogeneous cluster
     — how much of the speed-blind block-cyclic tail each one recovers."""
-    return {s: evaluate_cluster_het(name, cfg, s,
-                                    blocks_per_core=blocks_per_core,
-                                    total_blocks=total_blocks)
-            for s in strategies}
+    from repro.api.evaluate import compare_strategies as api_compare
+    _, Target = _facade()
+    return api_compare(name, Target(cluster=cfg), strategies=strategies,
+                       blocks_per_core=blocks_per_core,
+                       total_blocks=total_blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -335,26 +114,26 @@ def compare_strategies(name: str, cfg: ClusterConfig,
 def weak_scaling(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
                  cores: tuple[int, ...] = (1, 2, 4, 8, 16),
                  blocks_per_core: int = 1,
-                 point: OperatingPoint = NOMINAL_POINT
-                 ) -> list[ClusterKernelResult]:
+                 point: OperatingPoint = NOMINAL_POINT) -> list[Report]:
     """Work grows with the cluster (throughput scaling)."""
-    return [evaluate_cluster(name, cfg.with_cores(n), n, point,
-                             blocks_per_core=blocks_per_core)
+    ev, _ = _facade()
+    return [ev(name, _homogeneous_target(cfg, n, point),
+               blocks_per_core=blocks_per_core)
             for n in cores]
 
 
 def strong_scaling(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
                    cores: tuple[int, ...] = (1, 2, 4, 8, 16),
                    total_blocks: int = 48,
-                   point: OperatingPoint = NOMINAL_POINT
-                   ) -> list[ClusterKernelResult]:
+                   point: OperatingPoint = NOMINAL_POINT) -> list[Report]:
     """Fixed work split ever thinner (latency scaling + imbalance tail)."""
-    return [evaluate_cluster(name, cfg.with_cores(n), n, point,
-                             total_blocks=total_blocks)
+    ev, _ = _facade()
+    return [ev(name, _homogeneous_target(cfg, n, point),
+               total_blocks=total_blocks)
             for n in cores]
 
 
-def scaling_efficiency(results: list[ClusterKernelResult]) -> list[float]:
+def scaling_efficiency(results: list[Report]) -> list[float]:
     """Per-entry parallel efficiency vs the first (1-core) entry.
 
     Weak scaling: time(1)/time(n) with work ∝ n → ideal 1.0.
@@ -392,18 +171,20 @@ def cluster_roofline(cfg: ClusterConfig = SNITCH_CLUSTER,
     """FP64 roofline of the cluster: compute roof = n_cores FMA lanes, memory
     roof = the shared DMA engine.  FLOPs are counted as FP instructions per
     element (FMA=1 issue slot — consistent with the IPC accounting)."""
+    from repro.cluster.dma import BYTES_PER_ELEM
     peak = cfg.n_cores * 2.0 * point.freq_ghz          # GFLOP/s, FMA = 2
     bw_gbs = cfg.dma_bytes_per_cycle * point.freq_ghz  # GB/s
     out = []
     for name in KERNELS:
         sched = copift_schedule(name)
         flops_per_elem = 2.0 * sched.n_fp              # count FMAs generously
-        bytes_per_elem = _dma.BYTES_PER_ELEM[name]
+        bytes_per_elem = BYTES_PER_ELEM[name]
         oi = (flops_per_elem / bytes_per_elem if bytes_per_elem
               else float("inf"))
         attainable = min(peak, oi * bw_gbs) if bytes_per_elem else peak
-        r = evaluate_cluster(name, cfg, cfg.n_cores, point,
-                             blocks_per_core=blocks_per_core)
+        r = _facade()[0](name,
+                         _homogeneous_target(cfg, cfg.n_cores, point),
+                         blocks_per_core=blocks_per_core)
         achieved = (flops_per_elem * r.total_elems
                     / (r.cycles_copift / point.freq_ghz))  # GFLOP/s
         out.append(RooflinePoint(
@@ -411,21 +192,3 @@ def cluster_roofline(cfg: ClusterConfig = SNITCH_CLUSTER,
             attainable_gflops=attainable, achieved_gflops=achieved,
             bound="memory" if attainable < peak else "compute"))
     return out
-
-
-# ---------------------------------------------------------------------------
-# Aggregates
-# ---------------------------------------------------------------------------
-
-def headline(results: list[ClusterKernelResult]) -> dict:
-    """fig2-style aggregates over a set of per-kernel cluster results."""
-    return dict(
-        geomean_speedup=geomean([r.speedup for r in results]),
-        peak_speedup=max(r.speedup for r in results),
-        peak_ipc=max(r.ipc_copift for r in results),
-        geomean_ipc_gain=geomean([r.ipc_copift / r.ipc_base
-                                  for r in results]),
-        geomean_power_ratio=geomean([r.power_ratio for r in results]),
-        max_power_ratio=max(r.power_ratio for r in results),
-        geomean_energy_saving=geomean([r.energy_saving for r in results]),
-        peak_energy_saving=max(r.energy_saving for r in results))

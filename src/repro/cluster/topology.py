@@ -141,19 +141,50 @@ class ClusterConfig:
                 and len({i.point for i in self.islands}) > 1)
 
 
+#: The grammar ``parse_islands`` accepts, quoted verbatim in its errors.
+_ISLAND_GRAMMAR = ("'<count>@<point-name>[,<count>@<point-name>...]', e.g. "
+                   "'2@1.45GHz@1.00V,6@0.50GHz@0.60V'")
+
+
 def parse_islands(spec: str, cfg: "ClusterConfig") -> tuple[DvfsIsland, ...]:
     """Parse a CLI island spec ``"<count>@<point>,<count>@<point>,..."``
-    (e.g. ``"2@1.45GHz@1.00V,6@0.50GHz@0.60V"``) against ``cfg``'s ladder."""
+    (e.g. ``"2@1.45GHz@1.00V,6@0.50GHz@0.60V"``) against ``cfg``'s ladder.
+
+    Errors name the offending token (by position) and the expected
+    grammar, so a malformed sweep flag fails with an actionable message
+    rather than an opaque int() traceback."""
+    if not spec or not spec.strip():
+        raise ValueError(f"empty island spec; expected {_ISLAND_GRAMMAR}")
     islands = []
-    for part in spec.split(","):
+    for i, part in enumerate(spec.split(",")):
         part = part.strip()
-        count, _, point_name = part.partition("@")
+        where = f"island {i + 1} of {spec!r}"
+        if not part:
+            raise ValueError(f"empty token at {where}; expected "
+                             f"{_ISLAND_GRAMMAR}")
+        count, sep, point_name = part.partition("@")
+        if not sep or not point_name:
+            raise ValueError(f"token {part!r} at {where} has no "
+                             f"'@<point-name>' part; expected "
+                             f"{_ISLAND_GRAMMAR}")
         try:
             n = int(count)
         except ValueError:
-            raise ValueError(f"bad island spec {part!r}: expected "
-                             f"'<count>@<point-name>'") from None
-        islands.append(DvfsIsland(n, cfg.point(point_name)))
+            raise ValueError(f"token {part!r} at {where}: core count "
+                             f"{count!r} is not an integer; expected "
+                             f"{_ISLAND_GRAMMAR}") from None
+        if n < 1:
+            raise ValueError(f"token {part!r} at {where}: core count must "
+                             f"be >= 1, got {n}; expected {_ISLAND_GRAMMAR}")
+        try:
+            point = cfg.point(point_name)
+        except ValueError:
+            raise ValueError(
+                f"token {part!r} at {where}: operating point "
+                f"{point_name!r} is not in the ladder "
+                f"{[p.name for p in cfg.operating_points]}; expected "
+                f"{_ISLAND_GRAMMAR}") from None
+        islands.append(DvfsIsland(n, point))
     return tuple(islands)
 
 

@@ -134,12 +134,15 @@ def make_plan(name: str, phases: Sequence[PhaseDef], n_elements: int,
     own scratch budget.  Unknown names keep the static Table-I rule.
     """
     if tune and block is None:
-        # Deferred import (tune builds on core); block-only search — a
-        # block from the joint argmin is only valid with the fusion and
+        # Deferred import (the facade builds on core); block-only search —
+        # a block from the joint argmin is only valid with the fusion and
         # pipelining choices it was found with, which this plan keeps.
-        from repro.tune import select_block
+        # The shared default tuner means this hits the same cache as the
+        # kernels' tiling defaults and the serve engine.
+        from repro.api import default_tuner
         try:
-            block = select_block(name, objective=tune_objective).best.block
+            block = default_tuner().block(
+                name, objective=tune_objective).best.block
         except KeyError:
             block = None  # not a tunable workload -> static Max Block rule
     # Buffer replicas: producer→consumer distance + 1 (Step 5).

@@ -19,7 +19,10 @@ use, then unpadded.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
+import warnings
 
 import numpy as np
 
@@ -35,41 +38,122 @@ from repro.kernels import softmax_tpu as _softmax
 
 LANES = _exp.LANES
 
-_DEFAULT_IMPL = "auto"
-_TUNED_DEFAULTS = False
+_IMPLS = ("auto", "pallas", "reference")
+
+#: Two layers of configuration.  Scoped overrides (``overrides`` /
+#: ``repro.api.config``) live in ContextVars: a ``with`` block in one
+#: thread or asyncio task cannot race a concurrent benchmark reading the
+#: default in another — the failure mode the old mutable globals invited.
+#: The *process-wide defaults* underneath (``set_impl`` /
+#: ``set_tuned_defaults``) stay plain module globals, visible from every
+#: thread: ``ServeEngine(autotune=True)`` sets them in ``__init__`` and
+#: the lazily-resolved jit traces must still see them when ``generate()``
+#: runs on a request thread (new threads start with empty contexts, so a
+#: ContextVar default would silently vanish there).
+_IMPL_DEFAULT = "auto"
+_TUNED_DEFAULT = False
+_IMPL_VAR: contextvars.ContextVar[str | None] = \
+    contextvars.ContextVar("repro_kernels_impl", default=None)
+_TUNED_VAR: contextvars.ContextVar[bool | None] = \
+    contextvars.ContextVar("repro_kernels_tuned_defaults", default=None)
+
+
+def current_impl() -> str:
+    """The impl default in effect: the innermost scoped override, else the
+    process-wide default."""
+    v = _IMPL_VAR.get()
+    return _IMPL_DEFAULT if v is None else v
+
+
+def tuned_defaults_enabled() -> bool:
+    v = _TUNED_VAR.get()
+    return _TUNED_DEFAULT if v is None else v
+
+
+def set_impl(impl: str) -> None:
+    """Set the process-wide impl default ('auto' | 'pallas' |
+    'reference'), visible from every thread.  Prefer the scoped
+    ``repro.api.config(impl=...)`` where a ``with`` block suffices."""
+    global _IMPL_DEFAULT
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {_IMPLS}")
+    _IMPL_DEFAULT = impl
+
+
+def set_tuned_defaults(enable: bool = True) -> None:
+    """Let the autotuner (``repro.tune``) pick the kernels' default block
+    tiling — the process-wide default, visible from every thread.  Entry
+    points called without an explicit ``block_rows`` then scale the module
+    default by the tuned block's share of the Table-I cap (the analytic
+    model's block choice transferred onto the Pallas grid); tuned results
+    come from the persistent tune cache, so the first call per kernel
+    searches and the rest are free.  Prefer the scoped
+    ``repro.api.config(...)`` unless the enablement must outlive a
+    ``with`` block (e.g. ``ServeEngine`` setup, whose jit traces resolve
+    tilings lazily at first generate, possibly on another thread)."""
+    global _TUNED_DEFAULT
+    _TUNED_DEFAULT = bool(enable)
+    _tuned_block_rows.cache_clear()
+
+
+@contextlib.contextmanager
+def overrides(impl: str | None = None, tuned_defaults: bool | None = None):
+    """Scoped kernel-config override — the engine behind
+    ``repro.api.config``.  ``None`` leaves a setting untouched; values are
+    restored (and the tuned-tiling memo dropped) on exit, even on error."""
+    tokens = []
+    if impl is not None:
+        if impl not in _IMPLS:
+            raise ValueError(f"unknown impl {impl!r}; expected one of "
+                             f"{_IMPLS}")
+        tokens.append((_IMPL_VAR, _IMPL_VAR.set(impl)))
+    if tuned_defaults is not None:
+        tokens.append((_TUNED_VAR, _TUNED_VAR.set(bool(tuned_defaults))))
+        _tuned_block_rows.cache_clear()
+    try:
+        yield
+    finally:
+        for var, token in reversed(tokens):
+            var.reset(token)
+        if tuned_defaults is not None:
+            _tuned_block_rows.cache_clear()
 
 
 def set_default_impl(impl: str) -> None:
-    """Process-wide default ('auto' | 'pallas' | 'reference')."""
-    global _DEFAULT_IMPL
-    assert impl in ("auto", "pallas", "reference")
-    _DEFAULT_IMPL = impl
+    """Deprecated shim: use ``repro.api.config(impl=...)`` (scoped) or
+    ``set_impl`` (persistent)."""
+    warnings.warn("set_default_impl is deprecated; use "
+                  "repro.api.config(impl=...) for a scoped override or "
+                  "repro.kernels.ops.set_impl for a persistent one",
+                  DeprecationWarning, stacklevel=2)
+    set_impl(impl)
 
 
 def enable_tuned_defaults(enable: bool = True) -> None:
-    """Let the autotuner (``repro.tune``) pick the kernels' default block
-    tiling.  Entry points called without an explicit ``block_rows`` then
-    scale the module default by the tuned block's share of the Table-I cap
-    (the analytic model's block choice transferred onto the Pallas grid);
-    tuned results come from the persistent tune cache, so the first call
-    per kernel searches and the rest are free."""
-    global _TUNED_DEFAULTS
-    _TUNED_DEFAULTS = enable
-    _tuned_block_rows.cache_clear()
+    """Deprecated shim: use ``repro.api.config(tuned_defaults=...)``
+    (scoped) or ``set_tuned_defaults`` (persistent)."""
+    warnings.warn("enable_tuned_defaults is deprecated; use "
+                  "repro.api.config(tuned_defaults=...) for a scoped "
+                  "override or repro.kernels.ops.set_tuned_defaults for a "
+                  "persistent one", DeprecationWarning, stacklevel=2)
+    set_tuned_defaults(enable)
 
 
 @functools.lru_cache(maxsize=None)
 def _tuned_block_rows(kernel: str, default_rows: int) -> int:
-    from repro import tune as _tune
-    w = _tune.get_workload(kernel)
-    res = _tune.select_block(w)   # only the block transfers to the tiling
+    # The facade's default tuner: one shared cache + cost oracle across
+    # ops/copift/engine consumers (repro.api.default_tuner).
+    from repro.api import default_tuner
+    tuner = default_tuner()
+    w = tuner._workload(kernel)
+    res = tuner.block(w)          # only the block transfers to the tiling
     return max(1, round(default_rows * res.best.block / w.max_block))
 
 
 def _resolve_rows(kernel: str, explicit: int | None, default_rows: int) -> int:
     if explicit is not None:
         return explicit
-    if _TUNED_DEFAULTS:
+    if tuned_defaults_enabled():
         try:
             return _tuned_block_rows(kernel, default_rows)
         except (ImportError, KeyError):
@@ -78,7 +162,7 @@ def _resolve_rows(kernel: str, explicit: int | None, default_rows: int) -> int:
 
 
 def _resolve(impl: str | None) -> str:
-    impl = impl or _DEFAULT_IMPL
+    impl = impl or current_impl()
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "reference"
     return impl

@@ -55,8 +55,9 @@ def main(argv=None):
 
     if args.autotune:
         from repro.kernels import ops as kops
-        kops.enable_tuned_defaults(True)
-        print("[tune] kernel block tilings autotuned (repro.tune cache)")
+        kops.set_tuned_defaults(True)
+        print("[tune] kernel block tilings autotuned "
+              "(repro.api.default_tuner cache)")
 
     cfg = load_config(args.arch, args.variant)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")

@@ -80,22 +80,26 @@ class ServeEngine:
                              "the cap)")
         if autotune:
             # Engine setup is where tuning pays: the softmax/PRNG kernels
-            # run every decode step, so let repro.tune pick their tiling
-            # once (cached) before the jit traces below bake it in.  The
-            # kernel defaults are process-wide state, so this affects all
-            # subsequent kernel calls; revert with
-            # ``repro.kernels.enable_tuned_defaults(False)``.
-            kops.enable_tuned_defaults(True)
+            # run every decode step, so let the facade's tuner pick their
+            # tiling once (cached) before the jit traces below bake it in.
+            # The context-scoped ``repro.api.config`` would not outlive
+            # __init__, while the traces resolve tilings lazily at the
+            # first generate() — so this uses the persistent setter for
+            # the current context; revert with
+            # ``repro.kernels.ops.set_tuned_defaults(False)``.
+            from repro import api
+            kops.set_tuned_defaults(True)
             # Also pick the cluster operating plan for the decode-hot
-            # kernels: the heterogeneous (DVFS-island) search, which never
-            # scores worse than the homogeneous ladder under the same
-            # power cap.  Advisory on this backend — `operating_plan` is
-            # what a Snitch-cluster deployment of the engine would pin.
-            from repro.tune import select_operating_point
+            # kernels: the heterogeneous (DVFS-island) search with
+            # per-island block refinement, which never scores worse than
+            # the homogeneous ladder under the same power cap.  Advisory
+            # on this backend — `operating_plan` is what a Snitch-cluster
+            # deployment of the engine would pin.
+            tuner = api.Tuner(api.Target.homogeneous(
+                power_cap_mw=power_cap_mw))
             self.operating_plan = {
-                name: select_operating_point(name,
-                                             power_cap_mw=power_cap_mw,
-                                             heterogeneous=True)
+                name: tuner.operating_point(name, heterogeneous=True,
+                                            per_island_blocks=True)
                 for name in ("softmax", "prng")}
         self._prefill = jax.jit(make_prefill(cfg))
         self._step = jax.jit(make_serve_step(cfg))

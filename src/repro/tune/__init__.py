@@ -27,6 +27,11 @@ Layer map (mirrors ``repro.core``'s and ``repro.cluster``'s):
 * ``cache``     — persistent JSON cache keyed by (kernel, problem, dtype,
   arch config, objective, space) so repeat calls are free
 
+The facade object ``repro.api.Tuner`` binds these front doors to one
+``Target`` and one cache (``.plan()`` / ``.block()`` /
+``.operating_point()``), and adds per-island block-size refinement on
+top of the heterogeneous search; prefer it in new code.
+
 Invariant (pinned in ``tests/test_tune.py``): with fusion off, the default
 mover assignment, pipelining on, one core and the nominal DVFS point, the
 tuned block size reproduces the Table-I "Max Block" choice — the tuner
@@ -39,8 +44,8 @@ from repro.tune.search import (Evaluated, TuneResult, exhaustive_search,
                                local_search, measure_candidates,
                                select_block, select_operating_point,
                                successive_halving, tune)
-from repro.tune.space import (Candidate, Knob, SearchSpace, default_space,
-                              island_ladder)
+from repro.tune.space import (Candidate, Knob, SearchSpace, block_ladder,
+                              default_space, island_ladder)
 from repro.tune.workloads import (BUILTIN_KERNELS, WORKLOADS, Workload,
                                   get_workload)
 
@@ -50,6 +55,7 @@ __all__ = [
     "Evaluated", "TuneResult", "exhaustive_search", "local_search",
     "measure_candidates", "select_block", "select_operating_point",
     "successive_halving", "tune",
-    "Candidate", "Knob", "SearchSpace", "default_space", "island_ladder",
+    "Candidate", "Knob", "SearchSpace", "block_ladder", "default_space",
+    "island_ladder",
     "BUILTIN_KERNELS", "WORKLOADS", "Workload", "get_workload",
 ]

@@ -164,11 +164,7 @@ def _core_power(workload: Workload, sched: CopiftSchedule,
 
 
 def _resolve_point(cfg: ClusterConfig, name: str) -> OperatingPoint:
-    for p in cfg.operating_points:
-        if p.name == name:
-            return p
-    raise ValueError(f"operating point {name!r} not in the ladder: "
-                     f"{[p.name for p in cfg.operating_points]}")
+    return cfg.point(name)   # the one ladder lookup (topology owns it)
 
 
 def _island_core_points(cfg: ClusterConfig,
@@ -184,6 +180,80 @@ def _island_core_points(cfg: ClusterConfig,
     for p, n in zip(pts, sizes):
         out.extend([p] * n)
     return tuple(out)
+
+
+def _island_blocks_per_core(cfg: ClusterConfig,
+                            cand: Candidate) -> tuple[int, ...]:
+    """Expand the candidate's per-island block sizes to one block size per
+    core, mirroring ``_island_core_points``'s even split."""
+    sizes = block_cyclic(cand.n_cores, len(cand.islands)).blocks_per_core
+    out: list[int] = []
+    for blk, n in zip(cand.island_blocks, sizes):
+        out.extend([blk] * n)
+    return tuple(out)
+
+
+def _evaluate_het_island_blocks(workload: Workload, cand: Candidate,
+                                problem: int, cfg: ClusterConfig,
+                                power_cap_mw: float | None) -> CostEstimate:
+    """Pricing path for per-island block sizes (``cand.island_blocks``).
+
+    With blocks of different sizes per island the "identical blocks"
+    premise of ``scheduler.assign`` no longer holds, so work is
+    apportioned in *elements*: speed-proportional shares for the weighted
+    strategies (largest-remainder, deterministic), even shares for the
+    speed-blind block-cyclic rule.  Each core then runs its share in its
+    own island's block size — larger blocks amortize per-block overheads,
+    smaller ones can dodge remainder waste on the slow islands, which is
+    exactly the headroom the shared-block knob could not express.
+
+    A *uniform* ``island_blocks`` tuple never reaches this path:
+    ``evaluate`` canonicalizes it onto the shared ``block`` knob, so the
+    per-island space strictly contains the shared-block space and the
+    tuner's refined pick can never score worse than the shared plan.
+    """
+    from repro.cluster.scheduler import _static_proportional
+
+    sched = tuned_schedule(workload, cand)
+    core_points = _island_core_points(cfg, cand)
+    core_blocks = _island_blocks_per_core(cfg, cand)
+    speeds = tuple(p.freq_ghz for p in core_points)
+    f_ref = max(speeds)
+    weights = speeds if cand.strategy != "block_cyclic" \
+        else (1.0,) * len(speeds)
+    shares = _static_proportional(problem, weights)
+
+    compute = 0.0
+    total_blocks = 0
+    active: list[int] = [i for i, s in enumerate(shares) if s]
+    act_speeds = tuple(speeds[i] for i in active)
+    for pos, i in enumerate(active):
+        blk = core_blocks[i]
+        n_blocks = math.ceil(shares[i] / blk)
+        total_blocks += n_blocks
+        profile = _access_profile(workload, sched, blk)
+        extra = profile.extra_stalls_het(cfg, act_speeds, pos)
+        c = _per_core_cycles(sched, n_blocks, blk, cand.pipelined, extra)
+        compute = max(compute, c * (f_ref / speeds[i]))
+    transfer = (transfer_cycles(cfg, workload.bytes_per_elem * problem)
+                if workload.bytes_per_elem else 0)
+    cycles = max(compute, transfer)
+
+    time_ns = cycles / f_ref
+    counts: dict[tuple[OperatingPoint, int], int] = {}
+    for i in active:
+        key = (core_points[i], core_blocks[i])
+        counts[key] = counts.get(key, 0) + 1
+    power_mw = sum(n * scale_breakdown(_core_power(workload, sched, blk),
+                                       p, cfg.nominal).total
+                   for (p, blk), n in counts.items())
+    instrs = ((sched.n_int + sched.n_fp) * problem
+              + sched.block_overhead_instrs() * total_blocks)
+    return CostEstimate(
+        cycles=cycles, time_ns=time_ns, energy_pj=power_mw * time_ns,
+        ipc=instrs / cycles, power_mw=power_mw,
+        feasible=(power_cap_mw is None or power_mw <= power_cap_mw),
+        dma_bound=transfer > compute)
 
 
 def _evaluate_het(workload: Workload, cand: Candidate, problem: int,
@@ -233,6 +303,9 @@ def _evaluate_het(workload: Workload, cand: Candidate, problem: int,
 @lru_cache(maxsize=16384)
 def _evaluate(workload: Workload, cand: Candidate, problem: int,
               cfg: ClusterConfig, power_cap_mw: float | None) -> CostEstimate:
+    if cand.island_blocks:
+        return _evaluate_het_island_blocks(workload, cand, problem, cfg,
+                                           power_cap_mw)
     if cand.islands:
         return _evaluate_het(workload, cand, problem, cfg, power_cap_mw)
     point = _resolve_point(cfg, cand.point)
@@ -280,6 +353,22 @@ def evaluate(workload: Workload | str, cand: Candidate,
                          f"{w.max_block}")
     if cand.n_cores < 1:
         raise ValueError(f"n_cores must be >= 1, got {cand.n_cores}")
+    if cand.island_blocks:
+        if len(cand.island_blocks) != len(cand.islands):
+            raise ValueError(
+                f"island_blocks {cand.island_blocks} must match the island "
+                f"layout {cand.islands} one-for-one ({len(cand.islands)} "
+                f"islands)")
+        for blk in cand.island_blocks:
+            if not 1 <= blk <= w.max_block:
+                raise ValueError(f"island block {blk} outside [1, "
+                                 f"{w.max_block}] for {w.name}")
+        if len(set(cand.island_blocks)) == 1:
+            # Every island at one block size IS the shared-block plan —
+            # canonicalize onto the shared knob so the per-island space
+            # strictly contains the shared one (the never-worse theorem).
+            cand = replace(cand, block=cand.island_blocks[0],
+                           island_blocks=())
     if len(cand.islands) <= 1 and cand.strategy != "block_cyclic":
         # With zero or one island the cores are uniform and every strategy
         # reduces to block-cyclic — canonicalize so the cross-product

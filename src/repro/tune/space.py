@@ -26,6 +26,13 @@ Knobs (field-for-field the ``Candidate`` dataclass):
   unequal cores (``cluster.scheduler.assign`` strategies).  Irrelevant —
   and ignored — when the islands are uniform, where every strategy
   reduces to block-cyclic.
+* ``island_blocks`` — heterogeneous refinement: per-island block sizes,
+  parallel to ``islands``.  ``()`` means every island shares the
+  ``block`` knob; a uniform tuple canonicalizes onto it, so the
+  per-island space strictly contains the shared-block one.  Searched by
+  ``repro.api.Tuner.operating_point(per_island_blocks=True)`` as a
+  refinement stage rather than a cross-product knob (its valid values
+  depend on the island layout).
 
 Adding a knob: add the field to ``Candidate`` (with its static default),
 give it a value list in ``default_space``, and teach ``cost.evaluate`` its
@@ -54,24 +61,34 @@ class Candidate:
     point: str = NOMINAL_POINT.name
     islands: tuple[str, ...] = ()
     strategy: str = "block_cyclic"
+    #: Per-island block sizes, parallel to ``islands``.  ``()`` means every
+    #: island shares the ``block`` knob (the pre-refinement plan); a
+    #: uniform tuple canonicalizes to the shared knob in ``cost.evaluate``,
+    #: so the per-island space strictly contains the shared-block one.
+    island_blocks: tuple[int, ...] = ()
 
     def sort_key(self):
         """Deterministic tie-break order: prefer the larger block, no
         fusion, the natural mover count, pipelining on, fewer cores,
-        fewer islands, the simpler schedule — i.e. prefer the candidate
-        closest to the paper's static plan."""
+        fewer islands, the simpler schedule, shared block sizes — i.e.
+        prefer the candidate closest to the paper's static plan."""
         return (-self.block, self.fuse_fp, -self.movers, not self.pipelined,
                 self.n_cores, self.point, len(self.islands), self.islands,
-                self.strategy != "block_cyclic", self.strategy)
+                self.strategy != "block_cyclic", self.strategy,
+                len(self.island_blocks), self.island_blocks)
 
     def to_dict(self) -> dict:
         return {f.name: getattr(self, f.name) for f in fields(self)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
-        vals = {f.name: d[f.name] for f in fields(cls)}
-        # JSON round-trips tuples as lists; restore hashability.
-        vals["islands"] = tuple(vals["islands"])
+        # Tolerate payloads from older schema revisions (missing fields
+        # keep their defaults); JSON round-trips tuples as lists, so
+        # restore hashability.
+        vals = {f.name: d[f.name] for f in fields(cls) if f.name in d}
+        for name in ("islands", "island_blocks"):
+            if name in vals:
+                vals[name] = tuple(vals[name])
         return cls(**vals)
 
 
@@ -144,7 +161,7 @@ class SearchSpace:
         return SearchSpace(knobs, default)
 
 
-def _block_ladder(cap: int, rungs: int = 5) -> tuple[int, ...]:
+def block_ladder(cap: int, rungs: int = 5) -> tuple[int, ...]:
     """Halving ladder topped by the Table-I cap: cap, cap//2, ... (>= 8)."""
     out = [cap]
     b = cap // 2
@@ -152,6 +169,10 @@ def _block_ladder(cap: int, rungs: int = 5) -> tuple[int, ...]:
         out.append(b)
         b //= 2
     return tuple(sorted(out))
+
+
+#: Backward-compatible private alias (pre-facade name).
+_block_ladder = block_ladder
 
 
 def island_ladder(cfg: ClusterConfig, max_islands: int = 2,

@@ -118,3 +118,52 @@ class TestCli:
             capture_output=True, text=True, cwd=REPO)
         assert out.returncode != 0
         assert "cannot read snapshot" in out.stderr
+
+    def test_fail_on_shape_gates_shape_changes_only(self, tmp_path):
+        """The CI gate: --fail-on-shape exits 1 when lines appear/vanish
+        (SNAP_B adds a het row), but numeric drift alone passes."""
+        pa, pb = tmp_path / "A.json", tmp_path / "B.json"
+        pa.write_text(json.dumps(SNAP_A))
+        pb.write_text(json.dumps(SNAP_B))
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--diff", str(pa), str(pb), "--fail-on-shape"],
+            capture_output=True, text=True, cwd=REPO)
+        assert out.returncode == 1
+        assert "diff.fail" in out.stdout
+        # Pure numeric drift (same shape): exit 0.
+        drift = _snapshot({
+            "fig2": ["fig2.expf,speedup,1.60", "fig2.logf,speedup,1.30"],
+            "cluster": ["cluster.expf,8,1.00GHz@0.80V,1.40,200.0",
+                        "cluster.expf,16,1.00GHz@0.80V,1.35,400.0"],
+        })
+        pc = tmp_path / "C.json"
+        pc.write_text(json.dumps(drift))
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--diff", str(pa), str(pc), "--fail-on-shape"],
+            capture_output=True, text=True, cwd=REPO, check=True)
+        assert "diff.changed" in out.stdout
+
+    def test_fail_on_shape_catches_column_level_changes(self, tmp_path):
+        """Regression: a numeric column added/vanished inside a surviving
+        line is a shape change too (documented contract)."""
+        a = _snapshot({"s": ["k,1.0"]})
+        b = _snapshot({"s": ["k,1.0,0.5"]})      # extra column, same key
+        pa, pb = tmp_path / "A.json", tmp_path / "B.json"
+        pa.write_text(json.dumps(a))
+        pb.write_text(json.dumps(b))
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--diff", str(pa), str(pb), "--fail-on-shape"],
+            capture_output=True, text=True, cwd=REPO)
+        assert out.returncode == 1
+        assert "diff.fail" in out.stdout
+
+    def test_fail_on_shape_requires_diff(self, tmp_path):
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--fail-on-shape"],
+            capture_output=True, text=True, cwd=REPO)
+        assert out.returncode != 0
+        assert "--fail-on-shape only applies to --diff" in out.stderr
