@@ -2,7 +2,11 @@
 
 Sweeps the four paper kernel families across {1, 2, 4, 8, 16} cores and the
 cluster's DVFS ladder, reporting speedup (COPIFT cluster vs RV32G cluster),
-cluster-aggregate IPC, power and energy per element per cell.
+cluster-aggregate IPC, power and energy per element per cell.  Every grid
+is priced through ``repro.api.sweep`` — one pass per kernel over the
+whole target list, with the repeated sub-simulations and power
+evaluations shared through the ``repro.perf`` memo underneath (identical
+numbers to per-cell ``evaluate``).
 
 At ``--n-cores 1`` (nominal point) the rows reduce bit-for-bit to the
 single-PE fig2 numbers — the geomean speedup/energy-saving lines reproduce
@@ -27,7 +31,7 @@ import json
 import sys
 
 from repro.api import (NOMINAL_POINT, SNITCH_CLUSTER, Target, Tuner,
-                       evaluate, headline)
+                       headline, sweep)
 from repro.cluster import STRATEGIES
 from repro.core.kernels_isa import KERNELS
 
@@ -38,29 +42,38 @@ DEFAULT_CORES = (1, 2, 4, 8, 16)
 DEFAULT_ISLAND_SPEC = "2@1.45GHz@1.00V,6@0.50GHz@0.60V"
 
 
+def _cell_reports(cores, points, kernels, blocks_per_core):
+    """One ``api.sweep`` pass per kernel over the (n_cores x point) grid:
+    ``(cells, {kernel: [report per cell]})``.  Shared per-kernel timings
+    and power evaluations are simulated once for the whole grid."""
+    cells = [(n, pt) for n in cores for pt in points]
+    targets = [Target.homogeneous(n_cores=n, point=pt) for n, pt in cells]
+    return cells, {k: sweep(k, targets, blocks_per_core=blocks_per_core)
+                   for k in kernels}
+
+
 def sweep_rows(cores=DEFAULT_CORES, points=None, kernels=None,
                blocks_per_core: int = 1) -> list[dict]:
     """One dict per (kernel × n_cores × operating point) cell."""
     points = points if points is not None else SNITCH_CLUSTER.operating_points
     kernels = kernels if kernels is not None else list(KERNELS)
+    cells, reports = _cell_reports(cores, points, kernels, blocks_per_core)
     rows = []
-    for n in cores:
-        for pt in points:
-            tgt = Target.homogeneous(n_cores=n, point=pt)
-            for k in kernels:
-                r = evaluate(k, tgt, blocks_per_core=blocks_per_core)
-                rows.append(dict(
-                    kernel=k, n_cores=n, point=pt.name,
-                    freq_ghz=pt.freq_ghz, vdd=pt.vdd,
-                    speedup=r.speedup, ipc=r.ipc_copift,
-                    ipc_base=r.ipc_base,
-                    power_mw=r.power_copift_mw,
-                    power_ratio=r.power_ratio,
-                    energy_saving=r.energy_saving,
-                    energy_pj_per_elem=r.energy_pj_per_elem,
-                    time_us=r.time_us,
-                    extra_contention=r.extra_contention,
-                    dma_bound=r.dma_bound, imbalance=r.imbalance))
+    for i, (n, pt) in enumerate(cells):
+        for k in kernels:
+            r = reports[k][i]
+            rows.append(dict(
+                kernel=k, n_cores=n, point=pt.name,
+                freq_ghz=pt.freq_ghz, vdd=pt.vdd,
+                speedup=r.speedup, ipc=r.ipc_copift,
+                ipc_base=r.ipc_base,
+                power_mw=r.power_copift_mw,
+                power_ratio=r.power_ratio,
+                energy_saving=r.energy_saving,
+                energy_pj_per_elem=r.energy_pj_per_elem,
+                time_us=r.time_us,
+                extra_contention=r.extra_contention,
+                dma_bound=r.dma_bound, imbalance=r.imbalance))
     return rows
 
 
@@ -68,15 +81,13 @@ def aggregate_rows(cores=DEFAULT_CORES, points=None,
                    blocks_per_core: int = 1) -> list[dict]:
     """fig2-style geomean aggregates per (n_cores × point) cell."""
     points = points if points is not None else SNITCH_CLUSTER.operating_points
+    cells, reports = _cell_reports(cores, points, list(KERNELS),
+                                   blocks_per_core)
     out = []
-    for n in cores:
-        for pt in points:
-            tgt = Target.homogeneous(n_cores=n, point=pt)
-            res = [evaluate(k, tgt, blocks_per_core=blocks_per_core)
-                   for k in KERNELS]
-            agg = headline(res)
-            agg.update(n_cores=n, point=pt.name)
-            out.append(agg)
+    for i, (n, pt) in enumerate(cells):
+        agg = headline([reports[k][i] for k in KERNELS])
+        agg.update(n_cores=n, point=pt.name)
+        out.append(agg)
     return out
 
 
@@ -104,11 +115,13 @@ def het_rows(island_spec: str = DEFAULT_ISLAND_SPEC,
     kernels = kernels if kernels is not None else list(KERNELS)
     rows = []
     for k in kernels:
-        hom = evaluate(k, Target.homogeneous(n_cores=het_target.n_cores),
-                       blocks_per_core=blocks_per_core)
-        for s in strategies:
-            r = evaluate(k, het_target.with_strategy(s),
-                         blocks_per_core=blocks_per_core)
+        # One batched pass per kernel: the homogeneous reference plus every
+        # strategy on the island layout.
+        hom, *per_strategy = sweep(
+            k, [Target.homogeneous(n_cores=het_target.n_cores)]
+            + [het_target.with_strategy(s) for s in strategies],
+            blocks_per_core=blocks_per_core)
+        for s, r in zip(strategies, per_strategy):
             rows.append(dict(
                 kernel=k, strategy=s, islands=island_spec,
                 n_cores=het_target.n_cores,

@@ -1,36 +1,41 @@
 """Benchmark: reproduce paper Fig. 2 (a: IPC, b: power, c: speedup+energy).
 
-Runs the dual-issue timing model and the component energy model over all six
-kernels (baseline vs COPIFT at each kernel's Table-I max block) and prints
-the per-kernel metrics plus the headline aggregates the paper reports.
+Evaluates the paper's six kernels (the fixed ``TABLE_I`` set — user
+kernels registered with ``api.register_kernel`` never change these
+tables) through the ``repro.api`` facade: each kernel resolves via
+``api.kernel`` to a :class:`~repro.api.KernelSpec` evaluated on
+``Target.single_pe()`` (the paper's setting: one core, nominal DVFS, the
+kernel's Table-I max block).  The facade path reduces bit-for-bit to the
+pre-facade ``core.timing.evaluate_kernel`` / ``core.energy`` numbers
+(pinned in ``tests/test_api.py``), so these rows are unchanged by the
+migration.
 """
 
 from __future__ import annotations
 
+from repro import api
 from repro.core.analytics import PAPER_HEADLINE, TABLE_I, geomean
-from repro.core.energy import evaluate_energy
-from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
-from repro.core.timing import evaluate_kernel
 
 
 def generate() -> tuple[list[dict], dict]:
     rows = []
-    for name in KERNELS:
-        perf = evaluate_kernel(name, baseline_trace(name),
-                               copift_schedule(name), TABLE_I[name].max_block)
-        en = evaluate_energy(name)
+    target = api.Target.single_pe()
+    for name in TABLE_I:
+        spec = api.kernel(name)
+        r = api.evaluate(spec, target)
+        pub = spec.table_i
         rows.append(dict(
-            kernel=name,
-            ipc_base=round(perf.ipc_base, 3),
-            ipc_copift=round(perf.ipc_copift, 3),
-            ipc_gain=round(perf.ipc_gain, 3),
-            i_prime=round(TABLE_I[name].i_prime, 3),
-            speedup=round(perf.speedup, 3),
-            s_prime=round(TABLE_I[name].s_prime, 3),
-            power_base_mw=round(en.power_base_mw, 2),
-            power_copift_mw=round(en.power_copift_mw, 2),
-            power_ratio=round(en.power_ratio, 3),
-            energy_saving=round(en.energy_saving, 3),
+            kernel=spec.name,
+            ipc_base=round(r.ipc_base, 3),
+            ipc_copift=round(r.ipc_copift, 3),
+            ipc_gain=round(r.ipc_copift / r.ipc_base, 3),
+            i_prime=round(pub.i_prime, 3),
+            speedup=round(r.speedup, 3),
+            s_prime=round(pub.s_prime, 3),
+            power_base_mw=round(r.power_base_mw, 2),
+            power_copift_mw=round(r.power_copift_mw, 2),
+            power_ratio=round(r.power_ratio, 3),
+            energy_saving=round(r.energy_saving, 3),
         ))
     agg = dict(
         geomean_speedup=round(geomean([r["speedup"] for r in rows]), 3),

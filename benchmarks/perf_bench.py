@@ -1,0 +1,205 @@
+"""Benchmark: timing-engine throughput — memoized + batched pricing vs the
+cold-cache path.
+
+The ``repro.perf`` layer changes *no* cycle count (parity is asserted in
+every pass below); what it changes is how fast the evaluation pipeline
+prices candidates.  Two measurements:
+
+* **Oracle throughput** — candidates/sec pricing a workload's *default
+  cluster search space* (``tune.space.default_space(cluster=True)``):
+  cold = ``REPRO_TIMING_MEMO`` bypassed, every candidate simulated from
+  scratch (the pre-memo behavior; each space candidate is distinct, so
+  the old per-candidate ``lru_cache`` never helped here), sampled over a
+  spread of the space; warm = memo on from empty,
+  ``tune.cost.evaluate_batch`` over the full space — the warm figure
+  *includes* all first-touch simulation misses.
+* **Sweep wall-time** — the ``cluster_sweep`` kernel × cores × DVFS grid:
+  cold loop of ``api.evaluate`` with the memo bypassed vs ``api.sweep``
+  with the memo on (again from empty).
+
+CLI:
+    PYTHONPATH=src python benchmarks/perf_bench.py            # full
+    PYTHONPATH=src python benchmarks/perf_bench.py --smoke    # CI smoke
+    PYTHONPATH=src python benchmarks/perf_bench.py --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+#: Workloads whose default cluster spaces the oracle benchmark prices.
+ORACLE_KERNELS = ("softmax", "expf")
+
+_LAST_DOC: dict | None = None
+
+
+def _clear_caches() -> None:
+    """Reset the whole pricing stack to a fresh-process state.  Importing
+    the subsystems first guarantees their lru tiers are registered with
+    ``repro.perf``; ``clear_all`` then empties the memo tables plus every
+    registered cache."""
+    import importlib
+
+    from repro.perf import memo
+    importlib.import_module("repro.tune.cost")
+    importlib.import_module("repro.api.evaluate")
+    memo.clear_all()
+
+
+def oracle_throughput(kernel: str = "softmax",
+                      cold_sample: int = 32) -> dict:
+    """Price ``kernel``'s default cluster space cold vs warm/batched.
+
+    The cold pass evaluates an even spread of ``cold_sample`` candidates
+    (pricing all ~1e3 from scratch would take minutes — which is the
+    point); the warm pass batch-prices the *entire* space from an empty
+    memo.  Throughputs are candidates/sec; ``parity`` asserts the sampled
+    cold estimates equal their batched counterparts exactly.
+    """
+    from repro.perf import memo
+    from repro.tune.cost import evaluate, evaluate_batch
+    from repro.tune.space import default_space
+    from repro.tune.workloads import get_workload
+
+    w = get_workload(kernel)
+    space = default_space(w, cluster=True)
+    cands = list(space.candidates())
+    stride = max(1, len(cands) // cold_sample)
+    sample = cands[::stride][:cold_sample]
+
+    _clear_caches()
+    with memo.memo_disabled():
+        t0 = time.perf_counter()
+        cold = [evaluate(w, c) for c in sample]
+        cold_s = time.perf_counter() - t0
+
+    _clear_caches()
+    t0 = time.perf_counter()
+    warm = evaluate_batch(w, cands)
+    warm_s = time.perf_counter() - t0
+
+    by_cand = dict(zip(cands, warm))
+    parity = all(by_cand[c] == e for c, e in zip(sample, cold))
+    cold_cps = len(sample) / cold_s
+    warm_cps = len(cands) / warm_s
+    return dict(kernel=kernel, space_size=len(cands),
+                cold_evaluated=len(sample),
+                cold_candidates_per_sec=cold_cps,
+                warm_candidates_per_sec=warm_cps,
+                speedup=warm_cps / cold_cps,
+                parity=parity)
+
+
+def sweep_walltime(smoke: bool = False) -> dict:
+    """Wall-time the cluster scaling grid cold vs through ``api.sweep``."""
+    from repro import api
+    from repro.core.kernels_isa import KERNELS
+    from repro.perf import memo
+
+    kernels = list(KERNELS[:2] if smoke else KERNELS)
+    cores = (1, 8) if smoke else (1, 2, 4, 8, 16)
+    points = api.SNITCH_CLUSTER.operating_points
+    targets = [api.Target.homogeneous(n_cores=n, point=pt)
+               for n in cores for pt in points]
+
+    _clear_caches()
+    with memo.memo_disabled():
+        t0 = time.perf_counter()
+        cold = {k: [api.evaluate(k, t) for t in targets] for k in kernels}
+        cold_s = time.perf_counter() - t0
+
+    _clear_caches()
+    t0 = time.perf_counter()
+    warm = {k: api.sweep(k, targets) for k in kernels}
+    warm_s = time.perf_counter() - t0
+
+    n_cells = len(kernels) * len(targets)
+    return dict(n_kernels=len(kernels), n_targets=len(targets),
+                n_cells=n_cells, cold_seconds=cold_s, warm_seconds=warm_s,
+                cold_cells_per_sec=n_cells / cold_s,
+                warm_cells_per_sec=n_cells / warm_s,
+                speedup=cold_s / warm_s,
+                parity=(cold == warm))
+
+
+def generate(smoke: bool = False, kernels=None) -> dict:
+    """Structured report: per-kernel oracle throughput + the sweep timing.
+    The oracle always prices the *default* cluster spaces (that is the
+    acceptance number); ``smoke`` only shrinks the cold sample and the
+    sweep grid."""
+    global _LAST_DOC
+    from repro.perf import memo
+    kernels = tuple(kernels or (ORACLE_KERNELS[:1] if smoke
+                                else ORACLE_KERNELS))
+    doc = dict(
+        oracle=[oracle_throughput(k, cold_sample=12 if smoke else 32)
+                for k in kernels],
+        sweep=sweep_walltime(smoke=smoke),
+        memo=memo.stats())
+    _LAST_DOC = doc
+    return doc
+
+
+def structured() -> dict:
+    """The last generated report (for ``run.py --json``), or a smoke run."""
+    return _LAST_DOC if _LAST_DOC is not None else generate(smoke=True)
+
+
+def format_lines(doc: dict) -> list[str]:
+    lines = ["perf.oracle,space_size,cold_evaluated,cold_cand_per_sec,"
+             "warm_cand_per_sec,speedup,parity"]
+    for r in doc["oracle"]:
+        lines.append(
+            f"perf.oracle.{r['kernel']},{r['space_size']},"
+            f"{r['cold_evaluated']},{r['cold_candidates_per_sec']:.1f},"
+            f"{r['warm_candidates_per_sec']:.1f},{r['speedup']:.1f},"
+            f"{r['parity']}")
+    s = doc["sweep"]
+    lines.append("perf.sweep,n_cells,cold_seconds,warm_seconds,speedup,"
+                 "parity")
+    lines.append(f"perf.sweep,{s['n_cells']},{s['cold_seconds']:.2f},"
+                 f"{s['warm_seconds']:.2f},{s['speedup']:.1f},"
+                 f"{s['parity']}")
+    return lines
+
+
+def run() -> list[str]:
+    """CSV section for ``benchmarks/run.py`` (smoke-sized: full default
+    oracle space for the headline kernel, reduced sweep grid)."""
+    return format_lines(generate(smoke=True))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one oracle kernel, reduced sweep grid")
+    ap.add_argument("--kernels", type=str, default=None,
+                    help="comma-separated oracle workloads "
+                         f"(default {','.join(ORACLE_KERNELS)})")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the structured report as JSON "
+                         "('-' for stdout)")
+    args = ap.parse_args(argv)
+    kernels = args.kernels.split(",") if args.kernels else None
+    doc = generate(smoke=args.smoke, kernels=kernels)
+    for line in format_lines(doc):
+        print(line)
+    if not all(r["parity"] for r in doc["oracle"]) \
+            or not doc["sweep"]["parity"]:
+        print("perf.fail,memoized results diverged from the cold path")
+        sys.exit(1)
+    if args.json:
+        if args.json == "-":
+            json.dump(doc, sys.stdout, indent=1)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

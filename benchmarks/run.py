@@ -9,6 +9,9 @@ Prints ``name,value,derived`` CSV lines:
                      repro.cluster subsystem
   * tune.*         — tuned-vs-default COPIFT plans (repro.tune) per
                      built-in kernel, plus tuner-picked operating points
+  * perf.*         — timing-engine throughput (repro.perf memo + batched
+                     oracle vs the cold-cache path) — the tooling's own
+                     performance trajectory
   * roofline.*     — TPU v5e roofline terms from the dry-run artifacts
                      (skipped with a notice until launch/dryrun.py has run)
 
@@ -35,8 +38,8 @@ import traceback
 
 
 def _sections() -> list[tuple[str, object]]:
-    from benchmarks import (cluster_sweep, fig2, fig3, kernels_bench, table1,
-                            tune_bench)
+    from benchmarks import (cluster_sweep, fig2, fig3, kernels_bench,
+                            perf_bench, table1, tune_bench)
     sections = [
         ("table1", table1.run),
         ("fig2", fig2.run),
@@ -44,6 +47,7 @@ def _sections() -> list[tuple[str, object]]:
         ("kernels", kernels_bench.run),
         ("cluster", cluster_sweep.run),
         ("tune", tune_bench.run),
+        ("perf", perf_bench.run),
     ]
     try:
         from benchmarks import roofline
@@ -64,6 +68,9 @@ def _structured(name: str):
         from benchmarks import fig2
         rows, agg = fig2.generate()
         return dict(rows=rows, aggregates=agg)
+    if name == "perf":
+        from benchmarks import perf_bench
+        return perf_bench.structured()
     return None
 
 
@@ -204,9 +211,10 @@ def main(argv=None) -> None:
                          "(default 0.02)")
     ap.add_argument("--fail-on-shape", action="store_true",
                     help="with --diff: exit 1 when the snapshot *shape* "
-                         "changed (sections/lines appearing, vanishing or "
-                         "changing cardinality) — the CI perf-trajectory "
-                         "gate; numeric drift alone stays advisory")
+                         "changed (lines appearing, vanishing or changing "
+                         "cardinality) — the CI perf-trajectory gate; "
+                         "numeric drift and entirely new sections stay "
+                         "advisory")
     args = ap.parse_args(argv)
 
     if args.fail_on_shape and not args.diff:
@@ -228,11 +236,27 @@ def main(argv=None) -> None:
             # Shape = structure, at every granularity: repeated-key
             # cardinality, whole lines, and individual numeric columns
             # appearing/vanishing inside a surviving line (a=None or
-            # b=None in the changed rows).
+            # b=None in the changed rows).  One escape hatch: lines in an
+            # entirely *new* section (one the baseline snapshot has no
+            # entry for) are growth, not a regression — without it the
+            # gate would deterministically block every PR that adds a
+            # benchmark section, with nothing in the PR able to go green.
+            # Removals, cardinality changes and new lines inside existing
+            # sections stay fatal.  "Existing" means the baseline actually
+            # recorded lines for the section — a skipped/errored section
+            # (lines=[], e.g. roofline without dry-run artifacts) is no
+            # baseline to regress against.
+            old_sections = {s for s, e in a.get("sections", {}).items()
+                            if e.get("lines")}
+            added_in_existing = [k for k in doc["only_in_b"]
+                                 if k.split(":", 1)[0] in old_sections]
+            for s in sorted({k.split(":", 1)[0] for k in doc["only_in_b"]
+                             if k.split(":", 1)[0] not in old_sections}):
+                print(f"diff.new_section,{s},advisory_no_baseline")
             column_shape = [r for r in doc["changed"]
                             if r["a"] is None or r["b"] is None]
             shape = (doc.get("shape_changed") or doc["only_in_a"]
-                     or doc["only_in_b"] or column_shape)
+                     or added_in_existing or column_shape)
             if shape:
                 print("diff.fail,snapshot shape changed (see "
                       "diff.shape_changed/removed/added/changed lines "

@@ -1,25 +1,28 @@
 """Benchmark: reproduce paper Table I.
 
-Regenerates every column from our own instruction-level kernel
-transcriptions (``repro.core.kernels_isa``) and the Eq. 1–3 analytics, then
-diffs against the published table.  Output: one CSV row per kernel.
+Regenerates every column from the kernel registry's instruction-level
+views — each of the paper's six kernels (the fixed ``TABLE_I`` set; user
+registrations never change this table) resolves via ``api.kernel`` to a
+:class:`~repro.api.KernelSpec` providing its baseline trace and COPIFT
+schedule — and the Eq. 1–3 analytics, then diffs against the published
+table.  Output: one CSV row per kernel.
 """
 
 from __future__ import annotations
 
-import time
-
+from repro import api
 from repro.core.analytics import TABLE_I, TABLE_I_PRINTED, KernelCounts
-from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
 
 
 def generate_rows() -> list[dict]:
     rows = []
-    for name in KERNELS:
-        base = baseline_trace(name)
-        cft = copift_schedule(name)
-        k = KernelCounts(name, base.n_int, base.n_fp, cft.n_int, cft.n_fp)
-        pub = TABLE_I[name]
+    for name in TABLE_I:
+        spec = api.kernel(name)
+        base = spec.baseline_trace()
+        cft = spec.schedule()
+        k = KernelCounts(name, base.n_int, base.n_fp,
+                         cft.n_int, cft.n_fp)
+        pub = spec.table_i
         printed = TABLE_I_PRINTED[name]
         rows.append(dict(
             kernel=name,

@@ -18,14 +18,17 @@ it, built from three objects:
 * :class:`Report`     — *what happened*: the one result dataclass
   :func:`evaluate` returns, with every derived metric defined once.
 
-Plus two verbs: :func:`evaluate` (the one cluster-evaluation code path)
-and :class:`Tuner` (plan/block/operating-point searches sharing one cache
-and one cost oracle), and :func:`config` (scoped kernel-runtime
-overrides).  The pre-facade entry points survive as thin deprecation
-shims; see README's migration table.
+Plus the verbs: :func:`evaluate` (the one cluster-evaluation code path),
+:func:`sweep` (many targets in one batched pass — same numbers, shared
+timings), :class:`Tuner` (plan/block/operating-point searches sharing one
+cache and one batched cost oracle), and :func:`config` (scoped
+kernel-runtime overrides).  The pre-facade entry points survive as thin
+deprecation shims; see README's migration table.  The memo/batch tier
+underneath all of it is ``repro.perf`` (disable with
+``REPRO_TIMING_MEMO=0``).
 """
 
-from repro.api.evaluate import compare_strategies, evaluate, headline
+from repro.api.evaluate import compare_strategies, evaluate, headline, sweep
 from repro.api.registry import (KernelSpec, kernel, kernels,
                                 register_kernel, specs)
 from repro.api.report import Report, ReportMetrics
@@ -56,7 +59,7 @@ def default_tuner() -> Tuner:
 __all__ = [
     "KernelSpec", "kernel", "kernels", "register_kernel", "specs",
     "Target", "Report", "ReportMetrics",
-    "evaluate", "compare_strategies", "headline",
+    "evaluate", "sweep", "compare_strategies", "headline",
     "Tuner", "default_tuner", "config",
     "NOMINAL_POINT", "OPERATING_POINTS", "SNITCH_CLUSTER", "ClusterConfig",
     "DvfsIsland", "OperatingPoint", "parse_islands",

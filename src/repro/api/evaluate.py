@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from functools import lru_cache
 
+import numpy as np
+
 from repro.api.registry import KernelSpec, kernel
 from repro.api.target import Target
 from repro.cluster.contention import (baseline_extra_contention_het,
@@ -51,23 +53,47 @@ def _baseline_timing(name: str, block: int, extra_contention: float):
                            extra_contention=extra_contention)
 
 
+@lru_cache(maxsize=None)
+def _cluster_powers(cfg, name: str, act_points) -> tuple[float, float]:
+    """Memoized (baseline, COPIFT) cluster power for one active-point
+    multiset — the power model re-simulates block timings per call, so
+    sweeps over many targets repay this cache heavily."""
+    return (het_cluster_power_mw(cfg, name, act_points, copift=False),
+            het_cluster_power_mw(cfg, name, act_points, copift=True))
+
+
+# repro.perf.clear_all() resets this lru tier along with the memo tables.
+from repro.perf.memo import register_cache as _register_cache  # noqa: E402
+
+for _c in (_copift_timing, _baseline_timing, _cluster_powers):
+    _register_cache(_c.cache_clear)
+del _c
+
+
 def _compute_cycles(timing_fn, name: str, block: int,
                     extras: tuple[float, ...], blocks: tuple[int, ...],
                     speeds: tuple[float, ...], f_ref: float):
     """Reference-clock compute latency over the active cores, plus one
     block's instruction count.  ``extras``/``blocks``/``speeds`` are
-    parallel over the *active* cores only.  Cores at the reference clock
-    contribute exact integer cycles (no x1.0 float round-trip) — the
-    homogeneous bit-for-bit reduction."""
-    latest = 0
-    instrs = 0
-    for extra, b, f in zip(extras, blocks, speeds):
-        bt = timing_fn(name, block, extra)
-        instrs = bt.instrs
-        c = bt.cycles * b
-        if f != f_ref:
-            c *= f_ref / f
-        latest = max(latest, c)
+    parallel over the *active* cores only.
+
+    The per-core finish times are reduced vectorized: cores at the
+    reference clock stay in exact int64 (cycles x blocks with no x1.0
+    float round-trip — the homogeneous bit-for-bit reduction), slower
+    cores scale by ``f_ref/f`` in float64 exactly as the scalar
+    expression did."""
+    bts = [timing_fn(name, block, e) for e in extras]
+    instrs = bts[-1].instrs
+    finish = np.asarray([bt.cycles for bt in bts], dtype=np.int64) \
+        * np.asarray(blocks, dtype=np.int64)
+    speeds_a = np.asarray(speeds)
+    at_ref = speeds_a == f_ref
+    latest = int(finish[at_ref].max()) if at_ref.any() else 0
+    if not at_ref.all():
+        scaled = finish[~at_ref] * (f_ref / speeds_a[~at_ref])
+        top = float(scaled.max())
+        if top > latest:
+            latest = top
     return latest, instrs
 
 
@@ -120,6 +146,7 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
     cycles_c = max(compute_c, transfer)
     cycles_b = max(compute_b, transfer)
     uniform = len(set(speeds)) == 1
+    power_b, power_c = _cluster_powers(cfg, name, act_points)
 
     return Report(
         name=name, strategy=target.strategy, core_points=core_points,
@@ -135,10 +162,30 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
                    else assignment.weighted_imbalance),
         dma_bound=transfer > compute_c,
         dma_utilization=(transfer / cycles_c if cycles_c else 0.0),
-        power_base_mw=het_cluster_power_mw(cfg, name, act_points,
-                                           copift=False),
-        power_copift_mw=het_cluster_power_mw(cfg, name, act_points,
-                                             copift=True))
+        power_base_mw=power_b,
+        power_copift_mw=power_c)
+
+
+def sweep(spec: "KernelSpec | str", targets, *,
+          blocks_per_core: int = 1,
+          total_blocks: int | None = None) -> "list[Report]":
+    """Evaluate one kernel on many :class:`Target`\\ s — the sweep entry
+    point (DVFS ladders, core-count scans, island layouts).
+
+    This is deliberately a thin ordered loop over :func:`evaluate`: all
+    the cross-target sharing lives in the layers underneath — the
+    ``(kernel, block, contention)`` timing lrus backed by the
+    ``repro.perf`` memo, the :func:`_cluster_powers` cache, and the
+    vectorized per-core reduction inside :func:`_compute_cycles` — so a
+    sweep's repeated sub-simulations run once however the targets are
+    ordered, and each entry is *definitionally* bit-for-bit equal to
+    ``evaluate(spec, target, ...)`` (asserted in ``tests/test_perf.py``).
+    ``benchmarks/cluster_sweep.py`` and the serve engine's operating-plan
+    selection are built on this.
+    """
+    spec = kernel(spec)
+    return [evaluate(spec, t, blocks_per_core=blocks_per_core,
+                     total_blocks=total_blocks) for t in targets]
 
 
 def _simulatable():

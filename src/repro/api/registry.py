@@ -84,6 +84,15 @@ class KernelSpec:
 
     # -- bound machinery ----------------------------------------------------
 
+    @property
+    def table_i(self):
+        """The paper's Table-I analytics row (``core.analytics.TABLE_I``)
+        for simulatable kernels."""
+        if self.isa_name is None:
+            raise ValueError(f"kernel {self.name!r} has no ISA view and "
+                             f"hence no Table-I row")
+        return TABLE_I[self.isa_name]
+
     def schedule(self):
         """The COPIFT ``CopiftSchedule`` (ISA view when available, else the
         workload's synthetic schedule)."""
@@ -91,6 +100,16 @@ class KernelSpec:
             from repro.core.kernels_isa import copift_schedule
             return copift_schedule(self.isa_name)
         return self.get_workload().schedule()
+
+    def baseline_trace(self):
+        """The RV32G baseline ``KernelTrace`` (ISA view) — what the
+        single-issue simulator and the Table-I analytics consume."""
+        if self.isa_name is None:
+            raise ValueError(f"kernel {self.name!r} has no ISA view; "
+                             f"simulatable kernels: "
+                             f"{[s.name for s in specs() if s.simulatable]}")
+        from repro.core.kernels_isa import baseline_trace
+        return baseline_trace(self.isa_name)
 
     def get_workload(self):
         """The bound ``tune.workloads.Workload``.  Raises ``KeyError`` for

@@ -32,7 +32,7 @@ from dataclasses import replace as _dc_replace
 from repro.api.registry import KernelSpec, kernel
 from repro.api.target import Target
 from repro.tune import cache as _tune_cache
-from repro.tune.cost import evaluate as _cost_evaluate
+from repro.tune.cost import evaluate_batch as _cost_evaluate_batch
 from repro.tune.cost import objective_value
 from repro.tune.search import (TuneResult, select_block,
                                select_operating_point, tune)
@@ -148,15 +148,16 @@ class Tuner:
         winning layout and keeps the best *feasible* candidate; the
         shared-block winner is in the pool (uniform tuples canonicalize
         onto it), so the result never scores worse under the same cap.
-        Cheap by construction — ladder^islands is ~25 oracle calls, all
-        memoized — so it runs after the (persistent-cached) layout search
-        rather than widening its keyed space.
+        The whole ladder^islands cross product is priced in one
+        ``evaluate_batch`` call (shared sub-simulations via the
+        ``repro.perf`` memo), so refinement stays cheap and runs after
+        the (persistent-cached) layout search rather than widening its
+        keyed space.
         """
         w = self._workload(spec)
         cap = self.target.power_cap_mw
         ladder = block_ladder(w.max_block)
-        best_cand, best_cost = res.best, res.best_cost
-        n_extra = 0
+        cands = []
         for combo in itertools.product(ladder,
                                        repeat=len(res.best.islands)):
             # Store uniform combos in canonical shared-block form (the
@@ -164,13 +165,15 @@ class Tuner:
             # field never contradicts its island_blocks — consumers that
             # only read .block (the kernels' tiling defaults) stay honest.
             if len(set(combo)) == 1:
-                cand = _dc_replace(res.best, block=combo[0],
-                                   island_blocks=())
+                cands.append(_dc_replace(res.best, block=combo[0],
+                                         island_blocks=()))
             else:
-                cand = _dc_replace(res.best, island_blocks=combo)
-            cost = _cost_evaluate(w, cand, res.problem,
-                                  self.target.cluster, cap)
-            n_extra += 1
+                cands.append(_dc_replace(res.best, island_blocks=combo))
+        costs = _cost_evaluate_batch(w, cands, res.problem,
+                                     self.target.cluster, cap)
+        best_cand, best_cost = res.best, res.best_cost
+        n_extra = len(cands)
+        for cand, cost in zip(cands, costs):
             # Feasible beats infeasible; within a class, the objective
             # decides (sort_key breaks ties toward the shared plan).
             if ((not cost.feasible, objective_value(cost, objective),

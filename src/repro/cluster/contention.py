@@ -109,6 +109,14 @@ def baseline_profile(name: str) -> AccessProfile:
                          pattern=PATTERN_RANDOM)
 
 
+# The profiles cache simulator-derived request rates; register them so
+# repro.perf.clear_all() resets the whole pricing stack.
+from repro.perf.memo import register_cache as _register_cache  # noqa: E402
+
+_register_cache(copift_profile.cache_clear)
+_register_cache(baseline_profile.cache_clear)
+
+
 def copift_extra_contention(cfg: ClusterConfig, name: str,
                             n_active: int) -> float:
     """Stalls/access to add to ``copift_block_timing`` for ``n_active``

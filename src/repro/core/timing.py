@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 
 from repro.core.isa import (BUFFER_SWITCH_CYCLES, Instr, KernelTrace,
                             SSR_SETUP_CYCLES_PER_STREAM, Domain)
+from repro.perf.memo import STREAM_MEMO, TIMING_MEMO
 
 
 # ---------------------------------------------------------------------------
@@ -111,19 +112,17 @@ def _list_schedule(instrs: list[Instr]) -> list[Instr]:
     return order
 
 
-def _simulate_inorder(instrs: list[Instr],
-                      tcdm_contention: float = 0.0) -> float:
+def _simulate_inorder_counts(instrs: list[Instr]) -> tuple[int, int]:
     """In-order single-issue execution of a statically scheduled stream:
     RAW stalls from result latencies + the single integer-RF write port
     (multi-cycle producers — mul, and cross-RF FP ops targeting the int RF —
     reserve their retire slot; colliding 1-cycle writers stall).
 
-    ``tcdm_contention`` adds fractional stall cycles per memory access,
-    modeling SSR-stream/LSU bank conflicts on the shared TCDM when data
-    movers are active.  Returns a *float* so callers that window the
-    simulation (``thread_cycles``) can accumulate fractional stalls across
-    windows before truncating once — per-window truncation would floor
-    small surcharges (e.g. the cluster's inter-core contention) to zero."""
+    Returns the contention-free ``(cycles, mem_accesses)`` pair: TCDM
+    contention only ever enters the total as ``_simulate_stream``'s final
+    ``t + mem · stalls_per_access`` term, so this pair is what the
+    content-addressed memo stores — one simulation prices every
+    contention value bit-for-bit."""
     ready: dict[str, int] = {}
     wb_busy: set[int] = set()
     t = 0
@@ -147,17 +146,37 @@ def _simulate_inorder(instrs: list[Instr],
                     t += 1
                     wb = t + ins.lat - 1
             ready[ins.dst] = wb + 1
-    return t + mem_accesses * tcdm_contention
+    return t, mem_accesses
+
+
+def _stream_counts(instrs: list[Instr], iters: int,
+                   schedule: bool = True) -> tuple[int, int]:
+    """Memoized unroll → schedule → simulate, returning the contention-free
+    ``(cycles, mem_accesses)`` pair.  Content-addressed on the body itself
+    (the instruction tuple), so independently built identical bodies —
+    e.g. a schedule registry rebuilding per call — share one entry."""
+    key = (tuple(instrs), iters, schedule)
+    hit = STREAM_MEMO.lookup(key)
+    if hit is not None:
+        return hit
+    stream = _ssa_unroll(instrs, iters)
+    if schedule:
+        stream = _list_schedule(stream)
+    return STREAM_MEMO.store(key, _simulate_inorder_counts(stream))
 
 
 def _simulate_stream(instrs: list[Instr], iters: int, schedule: bool = True,
                      tcdm_contention: float = 0.0) -> float:
-    """SSA-unroll → list-schedule (unless ``schedule=False``) → simulate;
-    float result (fractional contention stalls not yet truncated)."""
-    stream = _ssa_unroll(instrs, iters)
-    if schedule:
-        stream = _list_schedule(stream)
-    return _simulate_inorder(stream, tcdm_contention)
+    """SSA-unroll → list-schedule (unless ``schedule=False``) → simulate.
+
+    ``tcdm_contention`` adds fractional stall cycles per memory access,
+    modeling SSR-stream/LSU bank conflicts on the shared TCDM when data
+    movers are active.  Returns a *float* so callers that window the
+    simulation (``thread_cycles``) can accumulate fractional stalls across
+    windows before truncating once — per-window truncation would floor
+    small surcharges (e.g. the cluster's inter-core contention) to zero."""
+    t, mem_accesses = _stream_counts(instrs, iters, schedule)
+    return t + mem_accesses * tcdm_contention
 
 
 def simulate_single_issue(instrs: list[Instr], iters: int = 1,
@@ -219,6 +238,20 @@ class CopiftSchedule:
                 if len(self.fp_bodies) > 1 else (("int", 0), ("fp", 0))
         self.pipeline_depth = len(self.phase_order)
 
+    def fingerprint(self) -> tuple:
+        """Content fingerprint for the timing memo: two schedules with the
+        same bodies and static parameters share cached timings, however
+        they were built.  Cached on the instance — schedules are treated
+        as immutable after construction (every producer builds fresh
+        objects; mutate one and the cache goes stale)."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            fp = (self.name, tuple(self.int_body),
+                  tuple(tuple(b) for b in self.fp_bodies), self.n_ssrs,
+                  self.n_buffer_replicas, tuple(self.phase_order))
+            self.__dict__["_fingerprint"] = fp
+        return fp
+
     @property
     def n_int(self) -> int:
         return len(self.int_body)
@@ -260,6 +293,10 @@ def copift_block_timing(sched: CopiftSchedule, block: int,
     conflicts.  The default of 0 keeps the paper-calibrated single-PE
     numbers bit-for-bit.
     """
+    key = (sched.fingerprint(), "block", block, extra_contention)
+    hit = TIMING_MEMO.lookup(key)
+    if hit is not None:
+        return hit
     oh = sched.block_overhead_instrs()
     fp_first = sum(len(b) for b in sched.fp_bodies)      # FREP 1st iteration
     # Integer thread: its own body for the whole block + bookkeeping + the
@@ -273,8 +310,9 @@ def copift_block_timing(sched: CopiftSchedule, block: int,
     fp_cycles = fp_first + sum(thread_cycles(b, block - 1) for b in sched.fp_bodies)
     cycles = max(int_cycles, fp_cycles)
     instrs = (sched.n_int + sched.n_fp) * block + oh
-    return BlockTiming(cycles=cycles, int_cycles=int_cycles,
-                       fp_cycles=fp_cycles, instrs=instrs)
+    return TIMING_MEMO.store(key, BlockTiming(
+        cycles=cycles, int_cycles=int_cycles,
+        fp_cycles=fp_cycles, instrs=instrs))
 
 
 def baseline_timing(trace: KernelTrace, n: int = 1,
@@ -302,6 +340,10 @@ def copift_problem_timing(sched: CopiftSchedule, problem: int,
     iterations are identical, so we evaluate fill (d-1), one steady
     iteration, and drain (d-1) exactly and scale.
     """
+    key = (sched.fingerprint(), "problem", problem, block, extra_contention)
+    hit = TIMING_MEMO.lookup(key)
+    if hit is not None:
+        return hit
     n_blocks = max(1, math.ceil(problem / block))
     d = sched.pipeline_depth
     oh = sched.block_overhead_instrs()
@@ -335,12 +377,20 @@ def copift_problem_timing(sched: CopiftSchedule, problem: int,
     for jp in range(max(d - 1, n_blocks), total_iters):
         cycles += iter_cost(jp)
     instrs = (sched.n_int + sched.n_fp) * problem + oh * n_blocks
-    return BlockTiming(cycles=cycles, int_cycles=0, fp_cycles=0, instrs=instrs)
+    return TIMING_MEMO.store(key, BlockTiming(
+        cycles=cycles, int_cycles=0, fp_cycles=0, instrs=instrs))
 
 
 def ipc_surface(sched: CopiftSchedule, problems: list[int],
                 blocks: list[int]) -> dict[tuple[int, int], float]:
-    """IPC over a (problem size × block size) grid — Fig. 3."""
+    """IPC over a (problem size × block size) grid — Fig. 3.
+
+    Each cell resolves through the per-schedule timing memo, and the
+    per-block thread costs underneath (``thread_cycles`` windows,
+    content-addressed) are simulated once per block *however* the grid
+    is ordered — the full pipeline model used to be rebuilt from scratch
+    per cell.  Cell values are identical to the cold path (regression-
+    pinned in ``tests/test_timing_energy.py``)."""
     out = {}
     for n in problems:
         for b in blocks:
@@ -368,7 +418,15 @@ class KernelResult:
 
 def evaluate_kernel(name: str, base: KernelTrace, sched: CopiftSchedule,
                     block: int, steady_elems: int | None = None) -> KernelResult:
-    """Steady-state comparison of baseline vs COPIFT (Fig. 2a / 2c)."""
+    """Steady-state comparison of baseline vs COPIFT (Fig. 2a / 2c).
+
+    Compatibility entry point: registry kernels should be evaluated through
+    ``repro.api.evaluate(name, Target.single_pe())``, which reduces to
+    these numbers bit-for-bit (pinned in ``tests/test_api.py``) and adds
+    the cluster/DVFS axes.  This function remains the primitive for
+    *custom* traces/schedules outside the registry — and what the
+    ``core.energy`` calibration uses (``core`` cannot depend on ``api``).
+    """
     n = steady_elems or block
     bt = baseline_timing(base, n)
     ct = copift_block_timing(sched, block)

@@ -92,9 +92,13 @@ class ServeEngine:
             # Also pick the cluster operating plan for the decode-hot
             # kernels: the heterogeneous (DVFS-island) search with
             # per-island block refinement, which never scores worse than
-            # the homogeneous ladder under the same power cap.  Advisory
-            # on this backend — `operating_plan` is what a Snitch-cluster
-            # deployment of the engine would pin.
+            # the homogeneous ladder under the same power cap.  The whole
+            # search runs on the batched cost oracle over the repro.perf
+            # timing memo (tune.cost.evaluate_batch), so engine startup
+            # prices the full island x strategy x block space in well
+            # under a second instead of re-simulating per candidate.
+            # Advisory on this backend — `operating_plan` is what a
+            # Snitch-cluster deployment of the engine would pin.
             tuner = api.Tuner(api.Target.homogeneous(
                 power_cap_mw=power_cap_mw))
             self.operating_plan = {

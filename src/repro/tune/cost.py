@@ -39,6 +39,8 @@ import math
 from dataclasses import dataclass, replace
 from functools import lru_cache
 
+import numpy as np
+
 from repro.cluster.contention import (PATTERN_AFFINE, PATTERN_RANDOM,
                                       AccessProfile)
 from repro.cluster.dma import transfer_cycles
@@ -53,6 +55,7 @@ from repro.core.isa import Instr, count_mem_accesses
 from repro.core.timing import (PROGRAM_PROLOGUE_CYCLES, CopiftSchedule,
                                copift_block_timing, copift_problem_timing,
                                thread_cycles)
+from repro.perf.memo import register_cache as _register_cache
 from repro.tune.space import Candidate
 from repro.tune.workloads import Workload, get_workload
 
@@ -308,44 +311,19 @@ def _evaluate(workload: Workload, cand: Candidate, problem: int,
                                            power_cap_mw)
     if cand.islands:
         return _evaluate_het(workload, cand, problem, cfg, power_cap_mw)
-    point = _resolve_point(cfg, cand.point)
+    # The homogeneous path IS the batch path at group size one — scalar
+    # and batched pricing cannot drift apart by construction.
     sched = tuned_schedule(workload, cand)
-    block = cand.block
-    total_blocks = max(1, math.ceil(problem / block))
-    assignment = block_cyclic(total_blocks, cand.n_cores)
-    n_active = assignment.cores_active(0)
-    extra = _access_profile(workload, sched, block).extra_stalls(cfg, n_active)
-
-    compute = _per_core_cycles(sched, assignment.max_blocks, block,
-                               cand.pipelined, extra)
-    transfer = (transfer_cycles(cfg, workload.bytes_per_elem * problem)
-                if workload.bytes_per_elem else 0)
-    cycles = max(compute, transfer)
-
-    time_ns = cycles / point.freq_ghz
-    per_core_mw = scale_breakdown(_core_power(workload, sched, block),
-                                  point, cfg.nominal).total
-    power_mw = per_core_mw * n_active
-    instrs = ((sched.n_int + sched.n_fp) * problem
-              + sched.block_overhead_instrs() * total_blocks)
-    return CostEstimate(
-        cycles=cycles, time_ns=time_ns, energy_pj=power_mw * time_ns,
-        ipc=instrs / cycles, power_mw=power_mw,
-        feasible=(power_cap_mw is None or power_mw <= power_cap_mw),
-        dma_bound=transfer > compute)
+    return _batch_hom_group(workload, sched, [cand], problem, cfg,
+                            power_cap_mw)[0]
 
 
-def evaluate(workload: Workload | str, cand: Candidate,
-             problem: int | None = None,
-             cfg: ClusterConfig = SNITCH_CLUSTER,
-             power_cap_mw: float | None = None) -> CostEstimate:
-    """Price one candidate for ``problem`` elements of ``workload``.
+_register_cache(_evaluate.cache_clear)
 
-    Memoized on the full argument tuple — sweeps and repeated searches
-    re-price shared candidates for free within a process (the persistent
-    ``tune.cache`` handles the across-process case).
-    """
-    w = get_workload(workload) if isinstance(workload, str) else workload
+
+def _canonicalize(w: Workload, cand: Candidate) -> Candidate:
+    """Validate a candidate and put it in pricing-canonical form (the one
+    rule set shared by :func:`evaluate` and :func:`evaluate_batch`)."""
     if cand.block < 1:
         raise ValueError(f"block must be >= 1, got {cand.block}")
     if cand.block > w.max_block:
@@ -374,4 +352,118 @@ def evaluate(workload: Workload | str, cand: Candidate,
         # reduces to block-cyclic — canonicalize so the cross-product
         # search prices the redundant variants once, not three times.
         cand = replace(cand, strategy="block_cyclic")
+    return cand
+
+
+def evaluate(workload: Workload | str, cand: Candidate,
+             problem: int | None = None,
+             cfg: ClusterConfig = SNITCH_CLUSTER,
+             power_cap_mw: float | None = None) -> CostEstimate:
+    """Price one candidate for ``problem`` elements of ``workload``.
+
+    Memoized on the full argument tuple — sweeps and repeated searches
+    re-price shared candidates for free within a process (the persistent
+    ``tune.cache`` handles the across-process case).
+    """
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    cand = _canonicalize(w, cand)
     return _evaluate(w, cand, problem or w.default_problem, cfg, power_cap_mw)
+
+
+def _batch_hom_group(w: Workload, sched: CopiftSchedule,
+                     cands: list[Candidate], problem: int,
+                     cfg: ClusterConfig,
+                     power_cap_mw: float | None) -> list[CostEstimate]:
+    """Price one homogeneous plan group (shared rewritten schedule).
+
+    This is THE homogeneous pricing path: the scalar ``_evaluate`` calls
+    it at group size one, so scalar and batched estimates agree by
+    construction.  The per-candidate *compute* cycles come from the
+    (memoized) simulator machinery; every candidate-axis composition
+    (operating-point time, power, energy, IPC, feasibility) is done
+    elementwise with numpy — elementwise float64 ops are ordinary IEEE
+    operations, so batching the axis changes no value.
+    """
+    n = len(cands)
+    transfer = (transfer_cycles(cfg, w.bytes_per_elem * problem)
+                if w.bytes_per_elem else 0)
+    profiles: dict[int, AccessProfile] = {}
+    scaled_mw: dict[tuple[int, str], float] = {}
+    compute = np.empty(n, dtype=np.int64)
+    freq = np.empty(n)
+    per_core_mw = np.empty(n)
+    n_active = np.empty(n, dtype=np.int64)
+    instrs = np.empty(n, dtype=np.int64)
+    oh = sched.block_overhead_instrs()
+    per_elem = sched.n_int + sched.n_fp
+    for j, c in enumerate(cands):
+        point = _resolve_point(cfg, c.point)
+        total_blocks = max(1, math.ceil(problem / c.block))
+        assignment = block_cyclic(total_blocks, c.n_cores)
+        na = assignment.cores_active(0)
+        prof = profiles.get(c.block)
+        if prof is None:
+            prof = profiles[c.block] = _access_profile(w, sched, c.block)
+        extra = prof.extra_stalls(cfg, na)
+        compute[j] = _per_core_cycles(sched, assignment.max_blocks, c.block,
+                                      c.pipelined, extra)
+        mw = scaled_mw.get((c.block, c.point))
+        if mw is None:
+            mw = scaled_mw[(c.block, c.point)] = scale_breakdown(
+                _core_power(w, sched, c.block), point, cfg.nominal).total
+        per_core_mw[j] = mw
+        freq[j] = point.freq_ghz
+        n_active[j] = na
+        instrs[j] = per_elem * problem + oh * total_blocks
+    cycles = np.maximum(compute, transfer)
+    time_ns = cycles / freq
+    power_mw = per_core_mw * n_active
+    energy_pj = power_mw * time_ns
+    ipc = instrs / cycles
+    feasible = (np.ones(n, dtype=bool) if power_cap_mw is None
+                else power_mw <= power_cap_mw)
+    dma_bound = transfer > compute
+    return [CostEstimate(
+        cycles=int(cycles[j]), time_ns=float(time_ns[j]),
+        energy_pj=float(energy_pj[j]), ipc=float(ipc[j]),
+        power_mw=float(power_mw[j]), feasible=bool(feasible[j]),
+        dma_bound=bool(dma_bound[j])) for j in range(n)]
+
+
+def evaluate_batch(workload: Workload | str, candidates,
+                   problem: int | None = None,
+                   cfg: ClusterConfig = SNITCH_CLUSTER,
+                   power_cap_mw: float | None = None) -> list[CostEstimate]:
+    """Price many candidates in one pass — same numbers as :func:`evaluate`
+    for each, ~10-100x the throughput.
+
+    Homogeneous candidates are grouped by their plan knobs (``fuse_fp``,
+    ``movers``, ``pipelined`` — everything :func:`tuned_schedule` reads),
+    so each group rewrites the schedule once and shares one set of
+    sub-simulations through the ``repro.perf`` timing memo; the remaining
+    cluster math is composed vectorized over the candidate axis.
+    Island (heterogeneous) candidates go through the scalar per-core
+    paths, which share their sub-simulations through the same memo.
+
+    Returns one :class:`CostEstimate` per candidate, in input order, each
+    bit-for-bit equal to what ``evaluate`` returns for that candidate
+    (asserted in ``tests/test_perf.py``).
+    """
+    w = get_workload(workload) if isinstance(workload, str) else workload
+    problem = problem or w.default_problem
+    cands = [_canonicalize(w, c) for c in candidates]
+    out: list[CostEstimate | None] = [None] * len(cands)
+    groups: dict[tuple, list[int]] = {}
+    for i, c in enumerate(cands):
+        if c.islands or c.island_blocks:
+            out[i] = _evaluate(w, c, problem, cfg, power_cap_mw)
+        else:
+            groups.setdefault((c.fuse_fp, c.movers, c.pipelined),
+                              []).append(i)
+    for idxs in groups.values():
+        sched = tuned_schedule(w, cands[idxs[0]])
+        ests = _batch_hom_group(w, sched, [cands[i] for i in idxs], problem,
+                                cfg, power_cap_mw)
+        for i, est in zip(idxs, ests):
+            out[i] = est
+    return out

@@ -12,6 +12,12 @@
   the top-K candidates as real jit'd kernels via ``repro.kernels`` and
   re-rank by what the hardware actually did.
 
+Every strategy prices its candidate sets through the batched oracle
+(``cost.evaluate_batch``): candidates are grouped by shared
+sub-simulations and the cluster math is composed vectorized over the
+candidate axis — identical estimates to per-candidate ``evaluate``,
+orders of magnitude faster (``benchmarks/perf_bench.py``).
+
 Determinism: every strategy breaks objective ties with
 ``Candidate.sort_key`` (prefer the static plan's neighborhood), so a
 search result is a pure function of (workload, space, problem, config) —
@@ -28,7 +34,7 @@ from dataclasses import dataclass, field
 from repro.cluster.topology import SNITCH_CLUSTER, ClusterConfig
 from repro.tune import cache as _cache
 from repro.tune.cost import (OBJECTIVES, CostEstimate, evaluate,
-                             objective_value)
+                             evaluate_batch, objective_value)
 from repro.tune.space import Candidate, SearchSpace, default_space
 from repro.tune.workloads import Workload, get_workload
 
@@ -112,10 +118,12 @@ def exhaustive_search(workload: Workload, space: SearchSpace, problem: int,
                       power_cap_mw: float | None = None
                       ) -> tuple[Evaluated, list[Evaluated]]:
     """Price every candidate; exact argmin under the deterministic order.
-    Returns (best, everything evaluated at full fidelity)."""
-    evaluated = [Evaluated(c, evaluate(workload, c, problem, cfg,
-                                       power_cap_mw))
-                 for c in space.candidates()]
+    Returns (best, everything evaluated at full fidelity).  Pricing goes
+    through the batched oracle (one schedule rewrite per plan group,
+    shared sub-simulations) — same estimates, far higher throughput."""
+    cands = list(space.candidates())
+    costs = evaluate_batch(workload, cands, problem, cfg, power_cap_mw)
+    evaluated = [Evaluated(c, e) for c, e in zip(cands, costs)]
     return _best(evaluated, objective), evaluated
 
 
@@ -132,9 +140,9 @@ def local_search(workload: Workload, space: SearchSpace, problem: int,
                              power_cap_mw))
     seen = [cur]
     for _ in range(max_steps):
-        moves = [Evaluated(c, evaluate(workload, c, problem, cfg,
-                                       power_cap_mw))
-                 for c in space.neighbors(cur.candidate)]
+        moves_c = list(space.neighbors(cur.candidate))
+        costs = evaluate_batch(workload, moves_c, problem, cfg, power_cap_mw)
+        moves = [Evaluated(c, e) for c, e in zip(moves_c, costs)]
         seen += moves
         nxt = _best(moves + [cur], objective)
         if nxt.candidate == cur.candidate:
@@ -160,9 +168,8 @@ def successive_halving(workload: Workload, space: SearchSpace, problem: int,
         rungs += 1
     for r in range(rungs, -1, -1):
         fidelity = max(floor, problem // eta ** r) if r else problem
-        evals = [Evaluated(c, evaluate(workload, c, fidelity, cfg,
-                                       power_cap_mw))
-                 for c in cands]
+        costs = evaluate_batch(workload, cands, fidelity, cfg, power_cap_mw)
+        evals = [Evaluated(c, e) for c, e in zip(cands, costs)]
         if r == 0:
             return _best(evals, objective), evals
         evals.sort(key=lambda e: (not e.cost.feasible,

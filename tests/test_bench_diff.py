@@ -145,6 +145,39 @@ class TestCli:
             capture_output=True, text=True, cwd=REPO, check=True)
         assert "diff.changed" in out.stdout
 
+    def test_fail_on_shape_allows_entirely_new_sections(self, tmp_path):
+        """A section the baseline has no entry for is growth, not a
+        regression: the gate reports it (diff.new_section) but exits 0 —
+        otherwise every PR adding a benchmark section would be
+        deterministically red with nothing in the PR able to fix it.
+        A new line inside an *existing* section still fails (previous
+        test)."""
+        pa, pb = tmp_path / "A.json", tmp_path / "B.json"
+        pa.write_text(json.dumps(SNAP_A))
+        grown = json.loads(json.dumps(SNAP_A))
+        grown["sections"]["perf"] = {
+            "lines": ["perf.oracle.softmax,1200,32,37.6,4240.1,112.7,True"]}
+        pb.write_text(json.dumps(grown))
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--diff", str(pa), str(pb), "--fail-on-shape"],
+            capture_output=True, text=True, cwd=REPO, check=True)
+        assert "diff.new_section,perf,advisory_no_baseline" in out.stdout
+        assert "diff.fail" not in out.stdout
+        # A baseline section that recorded NO lines (skipped/errored, e.g.
+        # roofline without dry-run artifacts) is no baseline either:
+        # its first real lines are growth, not a shape regression.
+        skipped = json.loads(json.dumps(SNAP_A))
+        skipped["sections"]["perf"] = {"lines": [], "error": "skipped"}
+        pa2 = tmp_path / "A2.json"
+        pa2.write_text(json.dumps(skipped))
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "run.py"),
+             "--diff", str(pa2), str(pb), "--fail-on-shape"],
+            capture_output=True, text=True, cwd=REPO, check=True)
+        assert "diff.new_section,perf,advisory_no_baseline" in out.stdout
+        assert "diff.fail" not in out.stdout
+
     def test_fail_on_shape_catches_column_level_changes(self, tmp_path):
         """Regression: a numeric column added/vanished inside a surviving
         line is a shape change too (documented contract)."""

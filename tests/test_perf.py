@@ -1,0 +1,211 @@
+"""``repro.perf`` invariants: the batched cost oracle and the batched
+target sweep return bit-for-bit what the scalar entry points return (hot
+or cold), the searches built on them are unchanged, and the memo layer's
+switches behave.
+
+Parity here is exact equality — the memo/batch layer is an optimization
+of the evaluation *pipeline*, not of the model, so any drift is a bug.
+"""
+
+import pytest
+
+from repro import api
+from repro.perf import memo
+from repro.tune.cost import evaluate, evaluate_batch
+from repro.tune.space import Candidate, default_space
+from repro.tune.workloads import get_workload
+
+
+def _spaced(seq, k):
+    """An even spread of ``k`` elements."""
+    seq = list(seq)
+    stride = max(1, len(seq) // k)
+    return seq[::stride][:k]
+
+
+class TestBatchedOracleParity:
+    @pytest.mark.parametrize("name", ("softmax", "expf", "montecarlo"))
+    def test_homogeneous_space_matches_scalar(self, name):
+        w = get_workload(name)
+        cands = list(default_space(w, cluster=True).candidates())
+        batch = evaluate_batch(w, cands)
+        for c in _spaced(cands, 40):
+            assert batch[cands.index(c)] == evaluate(w, c)
+
+    def test_matches_cold_scalar(self):
+        """Batched+memoized equals the memo-bypassed scalar path — the
+        end-to-end 'not a single cycle changed' claim."""
+        w = get_workload("logf")
+        cands = _spaced(default_space(w, cluster=True).candidates(), 12)
+        memo.clear_all()
+        batch = evaluate_batch(w, cands)
+        with memo.memo_disabled():
+            cold = [evaluate(w, c) for c in cands]
+        assert batch == cold
+
+    def test_heterogeneous_and_island_blocks(self):
+        w = get_workload("expf")
+        cands = [
+            Candidate(block=w.max_block, n_cores=8,
+                      islands=("1.45GHz@1.00V", "0.50GHz@0.60V"),
+                      strategy="lpt"),
+            Candidate(block=w.max_block, n_cores=8,
+                      islands=("1.45GHz@1.00V", "0.50GHz@0.60V"),
+                      strategy="static_proportional",
+                      island_blocks=(w.max_block, w.max_block // 2)),
+            Candidate(block=w.max_block // 2, n_cores=4),
+        ]
+        batch = evaluate_batch(w, cands, power_cap_mw=300.0)
+        scalar = [evaluate(w, c, power_cap_mw=300.0) for c in cands]
+        assert batch == scalar
+
+    def test_invalid_candidate_raises_like_scalar(self):
+        w = get_workload("expf")
+        with pytest.raises(ValueError):
+            evaluate_batch(w, [Candidate(block=w.max_block + 1)])
+
+    def test_order_and_length_preserved(self):
+        w = get_workload("prng")
+        cands = _spaced(default_space(w).candidates(), 9)[::-1]
+        batch = evaluate_batch(w, cands)
+        assert len(batch) == len(cands)
+        assert batch == [evaluate(w, c) for c in cands]
+
+    def test_empty_batch(self):
+        assert evaluate_batch(get_workload("expf"), []) == []
+
+    def test_estimates_are_json_clean(self):
+        """Batch estimates must serialize exactly like scalar ones (the
+        tune cache writes them) — no numpy scalar types may leak out."""
+        import json
+        w = get_workload("softmax")
+        cands = _spaced(default_space(w, cluster=True).candidates(), 5)
+        for est in evaluate_batch(w, cands):
+            payload = json.loads(json.dumps(vars(est).copy()))
+            assert payload["cycles"] == est.cycles
+            assert isinstance(est.cycles, int)
+            assert isinstance(est.feasible, bool)
+
+
+class TestSearchesUnchanged:
+    def test_exhaustive_equals_scalar_argmin(self):
+        from repro.tune.cost import objective_value
+        from repro.tune.search import exhaustive_search
+        w = get_workload("logf")
+        space = default_space(w)
+        best, evaluated = exhaustive_search(w, space, w.default_problem)
+        assert len(evaluated) == space.size
+        # Every evaluated entry equals a direct scalar pricing, and the
+        # argmin is the scalar argmin under the same deterministic order.
+        scalar = [(c, evaluate(w, c, w.default_problem))
+                  for c in space.candidates()]
+        assert [(e.candidate, e.cost) for e in evaluated] == scalar
+        opt = min(scalar, key=lambda t: (objective_value(t[1], "cycles"),
+                                         t[0].sort_key()))
+        assert (best.candidate, best.cost) == opt
+
+    def test_tuner_island_refinement_still_never_worse(self):
+        tuner = api.Tuner(api.Target.homogeneous(power_cap_mw=300.0))
+        shared = tuner.operating_point("expf", heterogeneous=True,
+                                       per_island_blocks=False)
+        refined = tuner.operating_point("expf", heterogeneous=True,
+                                        per_island_blocks=True)
+        assert refined.best_cost.energy_pj <= shared.best_cost.energy_pj
+
+
+class TestSweepParity:
+    def test_sweep_equals_evaluate(self):
+        targets = [
+            api.Target.single_pe(),
+            api.Target.homogeneous(n_cores=8),
+            api.Target.homogeneous(
+                n_cores=4, point=api.SNITCH_CLUSTER.operating_points[0]),
+            api.Target.heterogeneous("2@1.45GHz@1.00V,6@0.50GHz@0.60V"),
+        ]
+        for name in ("expf", "pi_xoshiro128p"):
+            reports = api.sweep(name, targets, blocks_per_core=2)
+            assert reports == [api.evaluate(name, t, blocks_per_core=2)
+                               for t in targets]
+
+    def test_sweep_matches_cold_evaluate(self):
+        targets = [api.Target.homogeneous(n_cores=n) for n in (1, 8)]
+        memo.clear_all()
+        warm = api.sweep("logf", targets)
+        with memo.memo_disabled():
+            cold = [api.evaluate("logf", t) for t in targets]
+        assert warm == cold
+
+    def test_sweep_order_preserved(self):
+        targets = [api.Target.homogeneous(n_cores=8),
+                   api.Target.single_pe()]
+        reports = api.sweep("expf", targets)
+        assert [len(r.core_points) for r in reports] == [8, 1]
+
+
+class TestMemoLayer:
+    def test_env_parsing(self):
+        assert memo._env_enabled("1") and memo._env_enabled("yes")
+        for off in ("0", "false", "no", "off", " OFF "):
+            assert not memo._env_enabled(off)
+
+    def test_stats_and_clear(self):
+        from repro.core.kernels_isa import copift_schedule
+        from repro.core.timing import copift_block_timing
+        memo.clear_all()
+        copift_block_timing(copift_schedule("expf"), 64)
+        stats = {s["name"]: s for s in memo.stats()}
+        assert stats["stream"]["misses"] > 0
+        assert stats["timing"]["entries"] == 1
+        copift_block_timing(copift_schedule("expf"), 64)
+        stats = {s["name"]: s for s in memo.stats()}
+        assert stats["timing"]["hits"] == 1
+        memo.clear_all()
+        assert all(s["entries"] == 0 and s["hits"] == 0
+                   for s in memo.stats())
+
+    def test_clear_all_resets_registered_lru_tier(self):
+        """clear_all() must reset the whole pricing stack — the subsystem
+        lru caches above the memo tables included — so the documented
+        cold-rerun workflow really starts from scratch."""
+        import importlib
+        api_eval = importlib.import_module("repro.api.evaluate")
+        from repro.tune.cost import _evaluate
+        api.evaluate("expf", api.Target.homogeneous(n_cores=8))
+        assert api_eval._copift_timing.cache_info().currsize > 0
+        memo.clear_all()
+        assert api_eval._copift_timing.cache_info().currsize == 0
+        assert api_eval._cluster_powers.cache_info().currsize == 0
+        assert _evaluate.cache_info().currsize == 0
+
+    def test_store_eviction_resets_wholesale(self):
+        m = memo.SimMemo("tiny", max_entries=2)
+        m.store("a", 1)
+        m.store("b", 2)
+        m.store("c", 3)                 # hits the cap: wholesale reset
+        assert len(m) == 1 and m.lookup("c") == 3
+
+    def test_perf_package_lazy_exports(self):
+        import repro.perf as perf
+        from repro.api.evaluate import sweep as api_sweep
+        from repro.tune.cost import evaluate_batch as cost_batch
+        assert perf.evaluate_batch is cost_batch
+        assert perf.sweep is api_sweep
+        with pytest.raises(AttributeError):
+            perf.no_such_symbol
+
+
+class TestPerfBench:
+    def test_smoke_contract(self):
+        """The CI smoke's structured report: parity must hold and the
+        speedup fields must be present and positive (no threshold here —
+        wall-clock assertions are flaky on shared runners; the >=10x
+        acceptance number is recorded by run.py's snapshot)."""
+        from benchmarks import perf_bench
+        doc = perf_bench.generate(smoke=True)
+        assert doc["oracle"] and doc["oracle"][0]["parity"]
+        assert doc["sweep"]["parity"]
+        assert doc["oracle"][0]["speedup"] > 0
+        assert perf_bench.structured() is doc
+        lines = perf_bench.format_lines(doc)
+        assert any(line.startswith("perf.oracle.") for line in lines)
+        assert any(line.startswith("perf.sweep,") for line in lines)

@@ -11,9 +11,14 @@ import pytest
 
 from repro.core.analytics import PAPER_HEADLINE, TABLE_I, geomean
 from repro.core.energy import copift_power, baseline_power, evaluate_energy
+from repro.core.isa import Instr
 from repro.core.kernels_isa import KERNELS, baseline_trace, copift_schedule
-from repro.core.timing import (copift_block_timing, copift_problem_timing,
-                               evaluate_kernel, ipc_surface)
+from repro.core.timing import (CopiftSchedule, copift_block_timing,
+                               copift_problem_timing, evaluate_kernel,
+                               ipc_surface, simulate_single_issue,
+                               thread_cycles)
+from repro.perf import memo
+from tests._hypothesis_compat import given, settings, st
 
 
 @pytest.fixture(scope="module")
@@ -162,3 +167,95 @@ class TestEnergy:
     def test_energy_saving_positive_everywhere(self, energies):
         for e in energies:
             assert e.energy_saving > 1.0
+
+
+# ---------------------------------------------------------------------------
+# repro.perf timing memo — transparency (identical cycles, hot or cold)
+# ---------------------------------------------------------------------------
+
+def _random_body(spec: "list[tuple[int, int, int]]") -> list[Instr]:
+    """Deterministically expand a drawn spec into a well-formed mixed
+    int/FP/mem instruction body (register names follow the RISC-V
+    convention the simulator keys on: ``f*`` = FP RF)."""
+    ops = ("add", "xor", "mul", "srli", "lw", "sw",
+           "fadd.d", "fmul.d", "fmadd.d")
+    body: list[Instr] = []
+    for sel, a, b in spec:
+        op = ops[sel % len(ops)]
+        if op == "lw":
+            body.append(Instr("lw", f"r{a % 6}",
+                              (f"loop:p{b % 3}", f"mem:m{b % 3}")))
+        elif op == "sw":
+            body.append(Instr("sw", f"mem:m{b % 3}", (f"r{a % 6}",)))
+        elif op.startswith("f"):
+            body.append(Instr(op, f"f{a % 6}", (f"f{b % 6}", "const:c")))
+        else:
+            body.append(Instr(op, f"r{a % 6}", (f"r{b % 6}",)))
+    return body
+
+
+class TestTimingMemoTransparency:
+    """The repro.perf memo must never change a number: warm (memoized,
+    including cache hits) and cold (memo bypassed) runs agree exactly."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(spec=st.lists(st.tuples(st.integers(0, 8), st.integers(0, 5),
+                                   st.integers(0, 5)),
+                         min_size=1, max_size=14),
+           iters=st.integers(1, 24),
+           block=st.sampled_from((1, 2, 7, 8, 16, 33)),
+           contention=st.sampled_from((0.0, 0.25, 0.4375)))
+    def test_property_memo_equals_cold(self, spec, iters, block, contention):
+        body = _random_body(spec)
+        fp_body = [Instr("fmadd.d", "facc", ("facc", "loop:ssr0",
+                                             "const:c"))] + \
+            [i for i in body if i.opcode.startswith("f")][:4]
+        sched = CopiftSchedule("prop", int_body=list(body),
+                               fp_bodies=[fp_body])
+        with memo.memo_disabled():
+            cold = (simulate_single_issue(body, iters),
+                    thread_cycles(body, iters, contention),
+                    copift_block_timing(sched, block, contention),
+                    copift_problem_timing(sched, 8 * block, block))
+        memo.clear_all()
+        # First warm pass populates the tables, second one hits them;
+        # both must reproduce the cold numbers exactly.
+        for _ in range(2):
+            warm = (simulate_single_issue(body, iters),
+                    thread_cycles(body, iters, contention),
+                    copift_block_timing(CopiftSchedule(
+                        "prop", int_body=list(body),
+                        fp_bodies=[list(fp_body)]), block, contention),
+                    copift_problem_timing(sched, 8 * block, block))
+            assert warm == cold
+
+    @pytest.mark.parametrize("name", ("expf", "pi_lcg"))
+    def test_registry_kernels_memo_equals_cold(self, name):
+        block = TABLE_I[name].max_block
+        with memo.memo_disabled():
+            cold = evaluate_kernel(name, baseline_trace(name),
+                                   copift_schedule(name), block)
+        memo.clear_all()
+        warm = evaluate_kernel(name, baseline_trace(name),
+                               copift_schedule(name), block)
+        hit = evaluate_kernel(name, baseline_trace(name),
+                              copift_schedule(name), block)
+        assert warm == cold == hit
+
+    def test_ipc_surface_values_unchanged(self):
+        """Regression for the per-schedule cache rewiring: every grid cell
+        equals the cold-path value exactly (and the b > n skip rule is
+        preserved)."""
+        problems, blocks = [256, 1024, 4096], [32, 64, 341]
+        with memo.memo_disabled():
+            cold = ipc_surface(copift_schedule("poly_lcg"), problems, blocks)
+        memo.clear_all()
+        warm = ipc_surface(copift_schedule("poly_lcg"), problems, blocks)
+        assert set(warm) == set(cold)
+        assert warm == cold
+
+    def test_memo_disabled_context_restores(self):
+        assert memo.enabled()
+        with memo.memo_disabled():
+            assert not memo.enabled()
+        assert memo.enabled()
