@@ -1,0 +1,186 @@
+"""Benchmark: observability overhead — the ``repro.obs`` hooks must be
+free when nobody is looking.
+
+The obs layer threads per-call checks through the hot simulation paths
+(``core/timing.py``, the cost oracle, ``api.evaluate``).  This benchmark
+prices one representative pipeline workload — batch-pricing the softmax
+default cluster space plus a small ``api.sweep`` grid, memo cleared per
+run so the simulator actually runs — under three modes:
+
+* **reference** — every hook short-circuited at the module flag
+  (``obs.record.hooks_bypassed()``): what the pipeline would cost if the
+  instrumentation had never been added;
+* **disabled**  — the shipped default: hooks present, no session active
+  (one ``ContextVar`` read per simulation call).  The gate: disabled may
+  cost at most ``MAX_DISABLED_OVERHEAD`` (5%) over reference;
+* **enabled**   — inside ``obs.session(trace=True, metrics=True)``:
+  full tracing, reported for information (tracing is allowed to cost).
+
+Every mode must produce bit-for-bit identical ``CostEstimate``\\ s and
+``Report``\\ s — observability never changes a cycle (also pinned in
+``tests/test_obs.py``).
+
+CLI:
+    PYTHONPATH=src python benchmarks/obs_bench.py            # full
+    PYTHONPATH=src python benchmarks/obs_bench.py --smoke    # CI gate
+    PYTHONPATH=src python benchmarks/obs_bench.py --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+#: The CI gate: disabled-mode wall time over the bypassed reference.
+MAX_DISABLED_OVERHEAD = 0.05
+
+_LAST_DOC: dict | None = None
+
+
+def _clear_caches() -> None:
+    """Fresh-process pricing stack (as ``perf_bench._clear_caches``)."""
+    import importlib
+
+    from repro.perf import memo
+    importlib.import_module("repro.tune.cost")
+    importlib.import_module("repro.api.evaluate")
+    memo.clear_all()
+
+
+def _workload_once(smoke: bool):
+    """One pass of the representative pipeline workload.  Returns the
+    results (costs + reports) so the caller can assert cross-mode parity."""
+    from repro import api
+    from repro.tune.cost import evaluate_batch
+    from repro.tune.space import default_space
+    from repro.tune.workloads import get_workload
+
+    w = get_workload("softmax")
+    cands = list(default_space(w, cluster=True).candidates())
+    if smoke:
+        cands = cands[::4]
+    costs = evaluate_batch(w, cands)
+    points = api.SNITCH_CLUSTER.operating_points
+    targets = [api.Target.homogeneous(n_cores=n, point=pt)
+               for n in ((1, 8) if smoke else (1, 2, 4, 8))
+               for pt in points]
+    reports = {k: api.sweep(k, targets)
+               for k in (("expf",) if smoke else ("expf", "pi_lcg"))}
+    return costs, reports
+
+
+def _timed(mode: str, smoke: bool, repeats: int):
+    """Best-of-``repeats`` wall time of the workload under ``mode``;
+    returns ``(seconds, results)``.  Caches are cleared before every
+    repeat so each one re-runs the simulator (where the hooks live)."""
+    import repro.obs as obs
+    from repro.obs import record as obs_record
+
+    best, results = float("inf"), None
+    for _ in range(repeats):
+        _clear_caches()
+        if mode == "reference":
+            with obs_record.hooks_bypassed():
+                t0 = time.perf_counter()
+                results = _workload_once(smoke)
+                dt = time.perf_counter() - t0
+        elif mode == "disabled":
+            t0 = time.perf_counter()
+            results = _workload_once(smoke)
+            dt = time.perf_counter() - t0
+        elif mode == "enabled":
+            with obs.session(trace=True, metrics=True):
+                t0 = time.perf_counter()
+                results = _workload_once(smoke)
+                dt = time.perf_counter() - t0
+        else:  # pragma: no cover - guarded by the argparse choices
+            raise ValueError(f"unknown mode {mode!r}")
+        best = min(best, dt)
+    return best, results
+
+
+def generate(smoke: bool = False, repeats: int | None = None) -> dict:
+    """Structured report: per-mode wall times, the disabled/reference
+    overhead ratio against the gate, and cross-mode result parity."""
+    global _LAST_DOC
+    repeats = repeats if repeats is not None else (2 if smoke else 3)
+    ref_s, ref_res = _timed("reference", smoke, repeats)
+    dis_s, dis_res = _timed("disabled", smoke, repeats)
+    # One repeat is enough for the enabled figure: tracing is *allowed*
+    # to cost (it re-simulates every memoized stream for exact events),
+    # so the number is informational, not gated.
+    en_s, en_res = _timed("enabled", smoke, 1)
+    overhead = dis_s / ref_s - 1.0
+    doc = dict(
+        smoke=smoke, repeats=repeats,
+        reference_seconds=ref_s,
+        disabled_seconds=dis_s,
+        enabled_seconds=en_s,
+        disabled_overhead=overhead,
+        enabled_overhead=en_s / ref_s - 1.0,
+        max_disabled_overhead=MAX_DISABLED_OVERHEAD,
+        overhead_ok=overhead <= MAX_DISABLED_OVERHEAD,
+        parity=(ref_res == dis_res == en_res))
+    _LAST_DOC = doc
+    return doc
+
+
+def structured() -> dict:
+    """The last generated report (for ``run.py --json``), or a smoke run."""
+    return _LAST_DOC if _LAST_DOC is not None else generate(smoke=True)
+
+
+def format_lines(doc: dict) -> list[str]:
+    return [
+        "obs.overhead,mode,seconds,overhead_vs_reference",
+        f"obs.overhead,reference,{doc['reference_seconds']:.3f},0.0%",
+        f"obs.overhead,disabled,{doc['disabled_seconds']:.3f},"
+        f"{doc['disabled_overhead'] * 100:+.1f}%",
+        f"obs.overhead,enabled,{doc['enabled_seconds']:.3f},"
+        f"{doc['enabled_overhead'] * 100:+.1f}%",
+        f"obs.gate,max_disabled_overhead,"
+        f"{doc['max_disabled_overhead'] * 100:.0f}%,{doc['overhead_ok']}",
+        f"obs.parity,bit_identical_results,{doc['parity']},",
+    ]
+
+
+def run() -> list[str]:
+    """CSV section for ``benchmarks/run.py`` (smoke-sized)."""
+    return format_lines(generate(smoke=True))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate sizing: subsampled space, reduced grid")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timing repeats per mode (default 3, smoke 2)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the structured report as JSON "
+                         "('-' for stdout)")
+    args = ap.parse_args(argv)
+    doc = generate(smoke=args.smoke, repeats=args.repeats)
+    for line in format_lines(doc):
+        print(line)
+    if args.json:
+        if args.json == "-":
+            json.dump(doc, sys.stdout, indent=1)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(f"wrote {args.json}")
+    if not doc["parity"]:
+        print("obs.fail,observed results diverged from the reference run")
+        sys.exit(1)
+    if not doc["overhead_ok"]:
+        print(f"obs.fail,disabled-mode overhead "
+              f"{doc['disabled_overhead'] * 100:.1f}% exceeds the "
+              f"{doc['max_disabled_overhead'] * 100:.0f}% gate")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

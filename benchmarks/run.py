@@ -39,7 +39,7 @@ import traceback
 
 def _sections() -> list[tuple[str, object]]:
     from benchmarks import (cluster_sweep, fig2, fig3, kernels_bench,
-                            perf_bench, table1, tune_bench)
+                            obs_bench, perf_bench, table1, tune_bench)
     sections = [
         ("table1", table1.run),
         ("fig2", fig2.run),
@@ -48,6 +48,7 @@ def _sections() -> list[tuple[str, object]]:
         ("cluster", cluster_sweep.run),
         ("tune", tune_bench.run),
         ("perf", perf_bench.run),
+        ("obs", obs_bench.run),
     ]
     try:
         from benchmarks import roofline
@@ -71,6 +72,9 @@ def _structured(name: str):
     if name == "perf":
         from benchmarks import perf_bench
         return perf_bench.structured()
+    if name == "obs":
+        from benchmarks import obs_bench
+        return obs_bench.structured()
     return None
 
 
@@ -267,10 +271,18 @@ def main(argv=None) -> None:
     sections = _sections()
     if args.sections:
         wanted = [s.strip() for s in args.sections.split(",") if s.strip()]
+        if "help" in wanted or "list" in wanted:
+            # `--sections help` discovers the valid names instead of
+            # erroring — the harness is its own documentation.
+            print("available sections:")
+            for name, _ in sections:
+                print(f"  {name}")
+            return
         known = {name for name, _ in sections}
         unknown = [s for s in wanted if s not in known]
         if unknown:
-            ap.error(f"unknown sections {unknown}; known: {sorted(known)}")
+            ap.error(f"unknown sections {unknown}; known: {sorted(known)} "
+                     f"(run --sections help to list them)")
         sections = [(n, fn) for n, fn in sections if n in wanted]
 
     snapshot: dict = {"schema": 1, "sections": {}}

@@ -37,6 +37,8 @@ from repro.cluster.scheduler import assign
 from repro.core.analytics import TABLE_I
 from repro.core.kernels_isa import baseline_trace, copift_schedule
 from repro.core.timing import baseline_timing, copift_block_timing
+from repro.obs import record as _obs_record
+from repro.obs.spans import span as _obs_span
 
 
 @lru_cache(maxsize=None)
@@ -126,27 +128,36 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
     if total_blocks < 1:
         raise ValueError(f"need at least one block of work, got "
                          f"{total_blocks} (blocks_per_core={blocks_per_core})")
-    assignment = assign(total_blocks, speeds, target.strategy)
+    with _obs_span("api.evaluate", kernel=name, n_cores=cfg.n_cores,
+                   total_blocks=total_blocks, strategy=target.strategy):
+        assignment = assign(total_blocks, speeds, target.strategy)
 
-    active = tuple(i for i, b in enumerate(assignment.blocks_per_core) if b)
-    act_speeds = tuple(speeds[i] for i in active)
-    act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
-    act_points = tuple(core_points[i] for i in active)
-    extras_c = copift_extra_contention_het(cfg, name, act_speeds)
-    extras_b = baseline_extra_contention_het(cfg, name, act_speeds)
+        active = tuple(i for i, b in enumerate(assignment.blocks_per_core)
+                       if b)
+        act_speeds = tuple(speeds[i] for i in active)
+        act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
+        act_points = tuple(core_points[i] for i in active)
+        extras_c = copift_extra_contention_het(cfg, name, act_speeds)
+        extras_b = baseline_extra_contention_het(cfg, name, act_speeds)
 
-    compute_c, instrs_c = _compute_cycles(_copift_timing, name, block,
-                                          extras_c, act_blocks, act_speeds,
-                                          f_ref)
-    compute_b, instrs_b = _compute_cycles(_baseline_timing, name, block,
-                                          extras_b, act_blocks, act_speeds,
-                                          f_ref)
-    total_elems = block * total_blocks
-    transfer = transfer_cycles(cfg, kernel_bytes(name, total_elems))
-    cycles_c = max(compute_c, transfer)
-    cycles_b = max(compute_b, transfer)
-    uniform = len(set(speeds)) == 1
-    power_b, power_c = _cluster_powers(cfg, name, act_points)
+        compute_c, instrs_c = _compute_cycles(_copift_timing, name, block,
+                                              extras_c, act_blocks,
+                                              act_speeds, f_ref)
+        compute_b, instrs_b = _compute_cycles(_baseline_timing, name, block,
+                                              extras_b, act_blocks,
+                                              act_speeds, f_ref)
+        total_elems = block * total_blocks
+        transfer = transfer_cycles(cfg, kernel_bytes(name, total_elems))
+        cycles_c = max(compute_c, transfer)
+        cycles_b = max(compute_b, transfer)
+        uniform = len(set(speeds)) == 1
+        power_b, power_c = _cluster_powers(cfg, name, act_points)
+
+        rec = _obs_record.active_recorder()
+        if rec is not None:
+            _trace_evaluate(rec, name, block, active, act_speeds, act_blocks,
+                            extras_c, extras_b, f_ref, transfer, total_blocks,
+                            cycles_c, cycles_b)
 
     return Report(
         name=name, strategy=target.strategy, core_points=core_points,
@@ -164,6 +175,48 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
         dma_utilization=(transfer / cycles_c if cycles_c else 0.0),
         power_base_mw=power_b,
         power_copift_mw=power_c)
+
+
+def _trace_evaluate(rec, name, block, active, act_speeds, act_blocks,
+                    extras_c, extras_b, f_ref, transfer, total_blocks,
+                    cycles_c, cycles_b) -> None:
+    """Record the per-core cycle accounting of one traced evaluate.
+
+    Re-runs the COPIFT/baseline block timings with lanes scoped per core so
+    the trace carries ``eval<N>.core<i>/{int,fpss,rv32g}`` lanes, then emits
+    an ``evaluate`` summary with every exact intermediate the cluster
+    reduction consumed — what ``obs.export.reconcile`` replays against the
+    ``Report``.  The re-runs are bit-identical to the values the lru tier
+    served ``_compute_cycles`` (pure functions of kernel/block/contention;
+    pinned in ``tests/test_obs.py``), and the memo tables are consulted for
+    provenance only, never bypassed.  Lane names are sequence-numbered so
+    back-to-back evaluates in one session never mix aggregates."""
+    seq = len(rec.summaries)
+    sched = copift_schedule(name)
+    btrace = baseline_trace(name)
+    cores = []
+    for pos, i in enumerate(active):
+        scope = f"eval{seq}.core{i}"
+        with rec.lane(scope):
+            bt = copift_block_timing(sched, block,
+                                     extra_contention=extras_c[pos])
+            bb = baseline_timing(btrace, block,
+                                 extra_contention=extras_b[pos])
+        prefix = f"{scope}/"
+        lanes = {ln[len(prefix):]: dict(tot)
+                 for ln, tot in rec.lane_micro.items()
+                 if ln.startswith(prefix)}
+        cores.append(dict(core=i, freq_ghz=act_speeds[pos],
+                          blocks=act_blocks[pos],
+                          extra_contention_copift=extras_c[pos],
+                          extra_contention_base=extras_b[pos],
+                          block_cycles=bt.cycles, int_cycles=bt.int_cycles,
+                          fp_cycles=bt.fp_cycles, base_cycles=bb.cycles,
+                          lanes=lanes))
+    rec.summary(dict(kind="evaluate", name=name, block=block,
+                     total_blocks=total_blocks, ref_freq_ghz=f_ref,
+                     transfer_cycles=transfer, cycles_copift=cycles_c,
+                     cycles_base=cycles_b, cores=cores))
 
 
 def sweep(spec: "KernelSpec | str", targets, *,
@@ -184,8 +237,10 @@ def sweep(spec: "KernelSpec | str", targets, *,
     selection are built on this.
     """
     spec = kernel(spec)
-    return [evaluate(spec, t, blocks_per_core=blocks_per_core,
-                     total_blocks=total_blocks) for t in targets]
+    targets = list(targets)
+    with _obs_span("api.sweep", kernel=spec.name, n_targets=len(targets)):
+        return [evaluate(spec, t, blocks_per_core=blocks_per_core,
+                         total_blocks=total_blocks) for t in targets]
 
 
 def _simulatable():

@@ -31,6 +31,7 @@ from dataclasses import replace as _dc_replace
 
 from repro.api.registry import KernelSpec, kernel
 from repro.api.target import Target
+from repro.obs.spans import span as _obs_span
 from repro.tune import cache as _tune_cache
 from repro.tune.cost import evaluate_batch as _cost_evaluate_batch
 from repro.tune.cost import objective_value
@@ -97,12 +98,14 @@ class Tuner:
              measure_top_k: int = 0) -> TuneResult:
         """Joint plan-knob search (block, fusion, movers, pipelining; plus
         cores x DVFS when ``cluster=True``) — the old ``tune()``."""
-        return tune(self._workload(spec), problem=problem,
-                    objective=objective or self.objective or "cycles",
-                    cfg=self.target.cluster, cluster=cluster,
-                    power_cap_mw=self.target.power_cap_mw,
-                    space=space, cache=self.cache,
-                    measure_top_k=measure_top_k)
+        w = self._workload(spec)
+        with _obs_span("tuner.plan", workload=w.name, cluster=cluster):
+            return tune(w, problem=problem,
+                        objective=objective or self.objective or "cycles",
+                        cfg=self.target.cluster, cluster=cluster,
+                        power_cap_mw=self.target.power_cap_mw,
+                        space=space, cache=self.cache,
+                        measure_top_k=measure_top_k)
 
     def block(self, spec: "KernelSpec | Workload | str",
               objective: str | None = None,
@@ -110,11 +113,13 @@ class Tuner:
         """Block-size-only search, every other knob at its static default —
         what tiling-only consumers (``kernels.ops`` defaults,
         ``copift.make_plan(tune=True)``) must use."""
-        return select_block(self._workload(spec),
-                            objective=objective or self.objective
-                            or "cycles",
-                            problem=problem, cfg=self.target.cluster,
-                            cache=self.cache)
+        w = self._workload(spec)
+        with _obs_span("tuner.block", workload=w.name):
+            return select_block(w,
+                                objective=objective or self.objective
+                                or "cycles",
+                                problem=problem, cfg=self.target.cluster,
+                                cache=self.cache)
 
     def operating_point(self, spec: "KernelSpec | Workload | str",
                         n_cores: int | None = None,
@@ -130,14 +135,19 @@ class Tuner:
         winning multi-island layout with per-island block sizes.
         """
         objective = objective or self.objective or "energy"
-        res = select_operating_point(
-            self._workload(spec), cfg=self.target.cluster,
-            n_cores=n_cores if n_cores is not None else self.target.n_cores,
-            power_cap_mw=self.target.power_cap_mw, objective=objective,
-            cache=self.cache, heterogeneous=heterogeneous,
-            max_islands=max_islands)
-        if per_island_blocks and len(res.best.islands) > 1:
-            res = self._refine_island_blocks(spec, res, objective)
+        w = self._workload(spec)
+        with _obs_span("tuner.operating_point", workload=w.name,
+                       heterogeneous=heterogeneous,
+                       per_island_blocks=per_island_blocks):
+            res = select_operating_point(
+                w, cfg=self.target.cluster,
+                n_cores=n_cores if n_cores is not None
+                else self.target.n_cores,
+                power_cap_mw=self.target.power_cap_mw, objective=objective,
+                cache=self.cache, heterogeneous=heterogeneous,
+                max_islands=max_islands)
+            if per_island_blocks and len(res.best.islands) > 1:
+                res = self._refine_island_blocks(spec, res, objective)
         return res
 
     def _refine_island_blocks(self, spec, res: TuneResult,

@@ -34,6 +34,7 @@ from repro.core.analytics import TABLE_I
 from repro.core.isa import count_mem_accesses
 from repro.core.kernels_isa import baseline_trace, copift_schedule
 from repro.core.timing import baseline_timing, copift_block_timing
+from repro.obs import metrics as _metrics
 
 #: Pattern factors: affine SSR streams conflict less than random gathers.
 PATTERN_AFFINE = 0.5
@@ -57,7 +58,9 @@ class AccessProfile:
             return 0.0
         extra = 0.5 * (n_active - 1) * self.requests_per_cycle \
             * self.pattern / cfg.tcdm_banks
-        return min(extra, MAX_EXTRA_STALLS)
+        extra = min(extra, MAX_EXTRA_STALLS)
+        _metrics.observe("cluster.contention.stalls_per_access", extra)
+        return extra
 
     def extra_stalls_het(self, cfg: ClusterConfig,
                          core_speeds: tuple[float, ...],
@@ -79,7 +82,9 @@ class AccessProfile:
                        for j, f_j in enumerate(core_speeds) if j != core_idx)
         extra = 0.5 * pressure * self.requests_per_cycle \
             * self.pattern / cfg.tcdm_banks
-        return min(extra, MAX_EXTRA_STALLS)
+        extra = min(extra, MAX_EXTRA_STALLS)
+        _metrics.observe("cluster.contention.stalls_per_access", extra)
+        return extra
 
 
 @lru_cache(maxsize=None)

@@ -25,6 +25,7 @@ import math
 from dataclasses import dataclass
 
 from repro.cluster.topology import ClusterConfig
+from repro.obs import metrics as _metrics
 
 #: Steady-state DMA bytes per element (fp64 in + fp64 out for the streaming
 #: kernels; Monte-Carlo kernels are generated in-core → no stream traffic).
@@ -78,7 +79,12 @@ class DmaTiming:
 
 def transfer_cycles(cfg: ClusterConfig, total_bytes: float) -> int:
     """Cycles the shared engine needs for ``total_bytes`` (512-bit beats)."""
-    return math.ceil(total_bytes / cfg.dma_bytes_per_cycle)
+    cycles = math.ceil(total_bytes / cfg.dma_bytes_per_cycle)
+    if _metrics.enabled():
+        _metrics.inc("cluster.dma.transfers")
+        _metrics.inc("cluster.dma.bytes", total_bytes)
+        _metrics.inc("cluster.dma.transfer_cycles", cycles)
+    return cycles
 
 
 def cluster_dma_timing(cfg: ClusterConfig, name: str, total_elems: int,
@@ -86,6 +92,10 @@ def cluster_dma_timing(cfg: ClusterConfig, name: str, total_elems: int,
     """Steady-state compute-vs-transfer balance for the whole cluster: all
     cores' blocks share one DMA engine, so the transfer term aggregates the
     cluster's total traffic against the single engine's bandwidth."""
-    return DmaTiming(
+    t = DmaTiming(
         compute_cycles=compute_cycles,
         transfer_cycles=transfer_cycles(cfg, kernel_bytes(name, total_elems)))
+    if _metrics.enabled():
+        _metrics.inc("cluster.dma.bound_batches", int(t.dma_bound))
+        _metrics.observe("cluster.dma.utilization", t.dma_utilization)
+    return t

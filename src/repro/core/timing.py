@@ -35,6 +35,9 @@ from dataclasses import dataclass, field
 
 from repro.core.isa import (BUFFER_SWITCH_CYCLES, Instr, KernelTrace,
                             SSR_SETUP_CYCLES_PER_STREAM, Domain)
+from repro.obs.metrics import enabled as _metrics_enabled
+from repro.obs.metrics import inc as _metric_inc
+from repro.obs.record import active_recorder as _active_recorder
 from repro.perf.memo import STREAM_MEMO, TIMING_MEMO
 
 
@@ -149,20 +152,118 @@ def _simulate_inorder_counts(instrs: list[Instr]) -> tuple[int, int]:
     return t, mem_accesses
 
 
+def _simulate_inorder_observed(instrs: list[Instr], want_events: bool):
+    """Instrumented twin of :func:`_simulate_inorder_counts`: the identical
+    state machine (same ``t``/``ready``/``wb_busy`` transitions — parity
+    pinned by the hypothesis tests in ``tests/test_obs.py``), additionally
+    splitting lost issue slots into stall classes and, when
+    ``want_events``, emitting ``(issue_cycle, opcode, stall, kind)`` per
+    instruction for the trace recorder.  Kept separate so the disabled-mode
+    hot loop above stays branch-free."""
+    ready: dict[str, int] = {}
+    wb_busy: set[int] = set()
+    t = 0
+    mem_accesses = 0
+    raw_stalls = 0
+    wb_stalls = 0
+    events: list[tuple] | None = [] if want_events else None
+    for ins in instrs:
+        t += 1  # issue slot
+        t_entry = t
+        for s in ins.srcs:
+            if s in ready and ready[s] > t:
+                t = ready[s]
+        stall = t - t_entry
+        kind = "raw" if stall else ""
+        raw_stalls += stall
+        if ins.domain is Domain.MEM:
+            mem_accesses += 1
+        if ins.dst is not None:
+            wb = t + ins.lat - 1
+            if ins.wb_port_hazard:
+                while wb in wb_busy:  # port taken → retire one later
+                    wb += 1
+                wb_busy.add(wb)
+            elif ins.writes_int_rf and wb in wb_busy:
+                # 1-cycle op collides with an earlier producer's retire slot.
+                while wb in wb_busy:
+                    t += 1
+                    wb = t + ins.lat - 1
+                extra = t - t_entry - stall
+                wb_stalls += extra
+                stall += extra
+                kind = "wb_port" if not kind else "raw+wb_port"
+            ready[ins.dst] = wb + 1
+        if events is not None:
+            events.append((t, ins.opcode, stall, kind))
+    return t, mem_accesses, {"raw": raw_stalls, "wb_port": wb_stalls}, events
+
+
+def _record_stall_metrics(n_instrs: int, cycles: int, mem: int,
+                          stalls: dict[str, int]) -> None:
+    _metric_inc("timing.issue.instructions", n_instrs)
+    _metric_inc("timing.issue.cycles", cycles)
+    _metric_inc("timing.mem.accesses", mem)
+    _metric_inc("timing.stall.raw_cycles", stalls["raw"])
+    _metric_inc("timing.stall.wb_port_cycles", stalls["wb_port"])
+
+
 def _stream_counts(instrs: list[Instr], iters: int,
                    schedule: bool = True) -> tuple[int, int]:
     """Memoized unroll → schedule → simulate, returning the contention-free
     ``(cycles, mem_accesses)`` pair.  Content-addressed on the body itself
     (the instruction tuple), so independently built identical bodies —
-    e.g. a schedule registry rebuilding per call — share one entry."""
+    e.g. a schedule registry rebuilding per call — share one entry.
+
+    With observability on (``repro.obs``), the observed twin below runs
+    instead; the fast path here pays exactly two short-circuiting reads."""
+    rec = _active_recorder()
+    if rec is None and not _metrics_enabled():
+        key = (tuple(instrs), iters, schedule)
+        hit = STREAM_MEMO.lookup(key)
+        if hit is not None:
+            return hit
+        stream = _ssa_unroll(instrs, iters)
+        if schedule:
+            stream = _list_schedule(stream)
+        return STREAM_MEMO.store(key, _simulate_inorder_counts(stream))
+    return _stream_counts_observed(instrs, iters, schedule, rec)
+
+
+def _stream_counts_observed(instrs: list[Instr], iters: int, schedule: bool,
+                            rec) -> tuple[int, int]:
+    """The observed path.  Memo parity rules: the tables are never bypassed
+    or poisoned — a traced run *re-simulates* (the stored pair is a pure
+    function of the key, so the recomputed counts are bit-identical) and
+    consults the memo only to tag provenance; a metrics-only run serves
+    hits straight from the table (stall-class counters then accumulate on
+    cold simulations only — memo warmth is tracked separately)."""
     key = (tuple(instrs), iters, schedule)
     hit = STREAM_MEMO.lookup(key)
-    if hit is not None:
-        return hit
+    if rec is None:
+        if hit is not None:
+            _metric_inc("timing.stream.memo_hits")
+            return hit
+        _metric_inc("timing.stream.cold_sims")
+        stream = _ssa_unroll(instrs, iters)
+        if schedule:
+            stream = _list_schedule(stream)
+        t, mem, stalls, _ = _simulate_inorder_observed(stream, False)
+        _record_stall_metrics(len(stream), t, mem, stalls)
+        return STREAM_MEMO.store(key, (t, mem))
     stream = _ssa_unroll(instrs, iters)
     if schedule:
         stream = _list_schedule(stream)
-    return STREAM_MEMO.store(key, _simulate_inorder_counts(stream))
+    t, mem, stalls, events = _simulate_inorder_observed(stream, True)
+    if _metrics_enabled():
+        _metric_inc("timing.stream.memo_hits" if hit is not None
+                    else "timing.stream.cold_sims")
+        _record_stall_metrics(len(stream), t, mem, stalls)
+    rec.stream(cycles=t, n_instrs=len(stream), stalls=stalls, events=events,
+               provenance="hit" if hit is not None else "cold")
+    if hit is not None:
+        return hit
+    return STREAM_MEMO.store(key, (t, mem))
 
 
 def _simulate_stream(instrs: list[Instr], iters: int, schedule: bool = True,
@@ -176,6 +277,13 @@ def _simulate_stream(instrs: list[Instr], iters: int, schedule: bool = True,
     windows before truncating once — per-window truncation would floor
     small surcharges (e.g. the cluster's inter-core contention) to zero."""
     t, mem_accesses = _stream_counts(instrs, iters, schedule)
+    if tcdm_contention:
+        contention_cycles = mem_accesses * tcdm_contention
+        rec = _active_recorder()
+        if rec is not None:
+            rec.annotate("tcdm_contention", contention_cycles)
+        _metric_inc("timing.stall.tcdm_contention_cycles", contention_cycles)
+        return t + contention_cycles
     return t + mem_accesses * tcdm_contention
 
 
@@ -183,6 +291,12 @@ def simulate_single_issue(instrs: list[Instr], iters: int = 1,
                           schedule: bool = True,
                           tcdm_contention: float = 0.0) -> int:
     """Cycles for ``iters`` repetitions of ``instrs`` on the in-order core."""
+    rec = _active_recorder()
+    if rec is not None:
+        with rec.lane("rv32g"):
+            total = _simulate_stream(instrs, iters, schedule, tcdm_contention)
+            rec.annotate("thread_total", total, advance=False)
+            return int(total)
     return int(_simulate_stream(instrs, iters, schedule, tcdm_contention))
 
 
@@ -198,12 +312,27 @@ def thread_cycles(instrs: list[Instr], iters: int = 1,
     WINDOW = 8
     full, rem = divmod(iters, WINDOW)
     cycles = 0.0
+    rec = _active_recorder()
+    if rec is None:
+        if full:
+            cycles += _simulate_stream(instrs, WINDOW,
+                                       tcdm_contention=tcdm_contention) * full
+        if rem:
+            cycles += _simulate_stream(instrs, rem,
+                                       tcdm_contention=tcdm_contention)
+        return int(cycles)
+    # Traced: the full windows are simulated once and repeat-scaled (the
+    # recorder scales aggregates; micro events stay one representative
+    # window), and the exact pre-truncation total is annotated so the
+    # exported lane reconciles bit-for-bit (obs.export.reconcile).
     if full:
-        cycles += _simulate_stream(instrs, WINDOW,
-                                   tcdm_contention=tcdm_contention) * full
+        with rec.repeat(full):
+            cycles += _simulate_stream(instrs, WINDOW,
+                                       tcdm_contention=tcdm_contention) * full
     if rem:
         cycles += _simulate_stream(instrs, rem,
                                    tcdm_contention=tcdm_contention)
+    rec.annotate("thread_total", cycles, advance=False)
     return int(cycles)
 
 
@@ -294,8 +423,9 @@ def copift_block_timing(sched: CopiftSchedule, block: int,
     numbers bit-for-bit.
     """
     key = (sched.fingerprint(), "block", block, extra_contention)
+    rec = _active_recorder()
     hit = TIMING_MEMO.lookup(key)
-    if hit is not None:
+    if hit is not None and rec is None:
         return hit
     oh = sched.block_overhead_instrs()
     fp_first = sum(len(b) for b in sched.fp_bodies)      # FREP 1st iteration
@@ -304,12 +434,38 @@ def copift_block_timing(sched: CopiftSchedule, block: int,
     # SSR data movers are active during the block → TCDM bank contention on
     # the integer thread's own loads/stores.
     contention = (0.25 if sched.n_ssrs else 0.0) + extra_contention
-    int_cycles = thread_cycles(sched.int_body, block,
-                               tcdm_contention=contention) + oh + fp_first
-    # FP thread: remaining block-1 iterations stream from the FREP buffer.
-    fp_cycles = fp_first + sum(thread_cycles(b, block - 1) for b in sched.fp_bodies)
+    if rec is None:
+        int_cycles = thread_cycles(sched.int_body, block,
+                                   tcdm_contention=contention) + oh + fp_first
+        # FP thread: remaining block-1 iterations stream from the FREP
+        # buffer.
+        fp_cycles = fp_first + sum(thread_cycles(b, block - 1)
+                                   for b in sched.fp_bodies)
+    else:
+        # Traced: same arithmetic, with the two threads scoped onto their
+        # lanes.  A memo hit is recomputed rather than served (values are
+        # pure functions of the key → bit-identical; the hit is recorded
+        # as provenance) so the trace always has events.
+        with rec.lane("int"):
+            int_cycles = thread_cycles(
+                sched.int_body, block,
+                tcdm_contention=contention) + oh + fp_first
+            rec.annotate("block_overhead", oh)
+            rec.annotate("frep_launch", fp_first)
+        with rec.lane("fpss"):
+            fp_cycles = fp_first + sum(thread_cycles(b, block - 1)
+                                       for b in sched.fp_bodies)
+            rec.annotate("frep_first_iter", fp_first)
     cycles = max(int_cycles, fp_cycles)
     instrs = (sched.n_int + sched.n_fp) * block + oh
+    if rec is not None:
+        rec.block_record(name=sched.name, kind="block", block=block,
+                         extra_contention=extra_contention,
+                         provenance="hit" if hit is not None else "cold",
+                         int_cycles=int_cycles, fp_cycles=fp_cycles,
+                         cycles=cycles)
+        if hit is not None:
+            return hit
     return TIMING_MEMO.store(key, BlockTiming(
         cycles=cycles, int_cycles=int_cycles,
         fp_cycles=fp_cycles, instrs=instrs))
@@ -341,17 +497,27 @@ def copift_problem_timing(sched: CopiftSchedule, problem: int,
     iteration, and drain (d-1) exactly and scale.
     """
     key = (sched.fingerprint(), "problem", problem, block, extra_contention)
+    rec = _active_recorder()
     hit = TIMING_MEMO.lookup(key)
-    if hit is not None:
+    if hit is not None and rec is None:
         return hit
     n_blocks = max(1, math.ceil(problem / block))
     d = sched.pipeline_depth
     oh = sched.block_overhead_instrs()
     fp_first = sum(len(b) for b in sched.fp_bodies)
     contention = (0.25 if sched.n_ssrs else 0.0) + extra_contention
-    int_blk = thread_cycles(sched.int_body, block, tcdm_contention=contention)
-    fp_blk = [thread_cycles(b, max(0, block - 1)) + len(b)
-              for b in sched.fp_bodies]
+    if rec is None:
+        int_blk = thread_cycles(sched.int_body, block,
+                                tcdm_contention=contention)
+        fp_blk = [thread_cycles(b, max(0, block - 1)) + len(b)
+                  for b in sched.fp_bodies]
+    else:
+        with rec.lane("int"):
+            int_blk = thread_cycles(sched.int_body, block,
+                                    tcdm_contention=contention)
+        with rec.lane("fpss"):
+            fp_blk = [thread_cycles(b, max(0, block - 1)) + len(b)
+                      for b in sched.fp_bodies]
 
     def iter_cost(jp: int) -> int:
         active = [(p, jp - p) for p in range(d) if 0 <= jp - p < n_blocks]
@@ -377,6 +543,13 @@ def copift_problem_timing(sched: CopiftSchedule, problem: int,
     for jp in range(max(d - 1, n_blocks), total_iters):
         cycles += iter_cost(jp)
     instrs = (sched.n_int + sched.n_fp) * problem + oh * n_blocks
+    if rec is not None:
+        rec.block_record(name=sched.name, kind="problem", problem=problem,
+                         block=block, extra_contention=extra_contention,
+                         provenance="hit" if hit is not None else "cold",
+                         cycles=cycles)
+        if hit is not None:
+            return hit
     return TIMING_MEMO.store(key, BlockTiming(
         cycles=cycles, int_cycles=0, fp_cycles=0, instrs=instrs))
 

@@ -1,0 +1,46 @@
+"""``repro.obs`` — issue-slot tracing, stall-breakdown metrics, and
+profiling spans over the whole reproduction stack.
+
+Three opt-in layers behind one front door (:func:`session`):
+
+* **event tracing** (``obs.record``) — per-instruction issue events on
+  named lanes (int core / FPSS / rv32g baseline) with stall classes (RAW,
+  write-port, TCDM contention, FREP launch), recorded by the discrete-event
+  simulator in ``core.timing``;
+* **metrics** (``obs.metrics``) — a process-wide counter/gauge/histogram
+  registry fed by ``core.timing`` (stall split), ``cluster.contention`` /
+  ``cluster.dma``, ``tune.cost`` / ``tune.search`` (oracle throughput,
+  rung progress), ``perf.memo`` (warmth) and ``serve.engine`` (autotune);
+* **spans** (``obs.spans``) — nested wall-time scopes with per-span memo
+  provenance, wrapping ``api.evaluate``/``api.sweep``, tuner searches and
+  the serve engine's autotune.
+
+Everything is zero-cost-by-default: disabled, the hooks reduce to a couple
+of ContextVar reads per *call* (never per instruction), gated < 5 % by
+``benchmarks/obs_bench.py``.  Traced runs never bypass or poison the
+``repro.perf`` memo — they re-simulate (bit-identical by construction) and
+record hit/cold provenance, with parity pinned in ``tests/test_obs.py``.
+
+Exports go to Perfetto/Chrome-trace JSON (:meth:`Session.save`) or a
+terminal timeline; ``python -m repro.obs.trace <kernel>`` does both from
+the command line.
+"""
+
+from repro.obs import record as record              # noqa: F401
+from repro.obs import metrics as metrics            # noqa: F401
+from repro.obs import spans as spans                # noqa: F401
+from repro.obs import export as export              # noqa: F401
+from repro.obs.record import (TraceRecorder, active_recorder,  # noqa: F401
+                              hooks_bypassed, recording)
+from repro.obs.metrics import REGISTRY              # noqa: F401
+from repro.obs.spans import span                    # noqa: F401
+from repro.obs.export import (chrome_trace, reconcile,  # noqa: F401
+                              render_timeline, save_chrome_trace)
+from repro.obs.session import Session, session      # noqa: F401
+
+__all__ = [
+    "session", "Session", "span",
+    "TraceRecorder", "active_recorder", "recording", "hooks_bypassed",
+    "REGISTRY", "chrome_trace", "save_chrome_trace", "render_timeline",
+    "reconcile", "record", "metrics", "spans", "export",
+]

@@ -124,8 +124,13 @@ class SimMemo:
         self.misses = 0
 
     def stats(self) -> dict:
+        """Counters plus derived fields: ``entries`` (live table size) and
+        ``hit_rate`` (hits / lookups, 0.0 before any lookup) — the shape the
+        ``repro.obs`` metrics registry snapshots at session close."""
+        lookups = self.hits + self.misses
         return dict(name=self.name, entries=len(self._store),
-                    hits=self.hits, misses=self.misses)
+                    hits=self.hits, misses=self.misses,
+                    hit_rate=(self.hits / lookups) if lookups else 0.0)
 
 
 #: ``(body_instrs, iters, schedule) -> (cycles, mem_accesses)`` — the

@@ -11,6 +11,7 @@ COPIFT machinery.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -22,6 +23,8 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
 from repro.models.model import forward
 from repro.models.transformer import init_stack_cache
+from repro.obs import metrics as _obs_metrics
+from repro.obs.spans import span as _obs_span
 
 
 def make_cache(cfg: ModelConfig, batch: int, max_len: int):
@@ -75,9 +78,12 @@ class ServeEngine:
         self.power_cap_mw = power_cap_mw
         self.operating_plan = None
         if power_cap_mw is not None and not autotune:
-            raise ValueError("power_cap_mw only constrains the autotuned "
-                             "operating plan; pass autotune=True (or drop "
-                             "the cap)")
+            raise ValueError(
+                f"power_cap_mw={power_cap_mw} only constrains the autotuned "
+                f"operating plan, but autotune=False, so the cap would be "
+                f"silently ignored. Either pass autotune=True so the engine "
+                f"searches an operating plan under the cap, or drop "
+                f"power_cap_mw to run with the static kernel defaults.")
         if autotune:
             # Engine setup is where tuning pays: the softmax/PRNG kernels
             # run every decode step, so let the facade's tuner pick their
@@ -101,10 +107,25 @@ class ServeEngine:
             # Snitch-cluster deployment of the engine would pin.
             tuner = api.Tuner(api.Target.homogeneous(
                 power_cap_mw=power_cap_mw))
-            self.operating_plan = {
-                name: tuner.operating_point(name, heterogeneous=True,
-                                            per_island_blocks=True)
-                for name in ("softmax", "prng")}
+            t0 = time.perf_counter()
+            with _obs_span("serve.autotune", power_cap_mw=power_cap_mw):
+                self.operating_plan = {
+                    name: tuner.operating_point(name, heterogeneous=True,
+                                                per_island_blocks=True)
+                    for name in ("softmax", "prng")}
+            if _obs_metrics.enabled():
+                _obs_metrics.set_gauge("serve.autotune.wall_s",
+                                       time.perf_counter() - t0)
+                for name, res in self.operating_plan.items():
+                    c = res.best_cost
+                    _obs_metrics.set_gauge(
+                        f"serve.plan.{name}.cycles", c.cycles)
+                    _obs_metrics.set_gauge(
+                        f"serve.plan.{name}.energy_pj", c.energy_pj)
+                    _obs_metrics.set_gauge(
+                        f"serve.plan.{name}.power_mw", c.power_mw)
+                    _obs_metrics.set_gauge(
+                        f"serve.plan.{name}.time_ns", c.time_ns)
         self._prefill = jax.jit(make_prefill(cfg))
         self._step = jax.jit(make_serve_step(cfg))
 

@@ -36,6 +36,7 @@ ground truth, as ``repro.cluster`` does.
 from __future__ import annotations
 
 import math
+import time as _time
 from dataclasses import dataclass, replace
 from functools import lru_cache
 
@@ -55,6 +56,8 @@ from repro.core.isa import Instr, count_mem_accesses
 from repro.core.timing import (PROGRAM_PROLOGUE_CYCLES, CopiftSchedule,
                                copift_block_timing, copift_problem_timing,
                                thread_cycles)
+from repro.obs import metrics as _obs_metrics
+from repro.obs.spans import span as _obs_span
 from repro.perf.memo import register_cache as _register_cache
 from repro.tune.space import Candidate
 from repro.tune.workloads import Workload, get_workload
@@ -452,18 +455,31 @@ def evaluate_batch(workload: Workload | str, candidates,
     w = get_workload(workload) if isinstance(workload, str) else workload
     problem = problem or w.default_problem
     cands = [_canonicalize(w, c) for c in candidates]
-    out: list[CostEstimate | None] = [None] * len(cands)
-    groups: dict[tuple, list[int]] = {}
-    for i, c in enumerate(cands):
-        if c.islands or c.island_blocks:
-            out[i] = _evaluate(w, c, problem, cfg, power_cap_mw)
-        else:
-            groups.setdefault((c.fuse_fp, c.movers, c.pipelined),
-                              []).append(i)
-    for idxs in groups.values():
-        sched = tuned_schedule(w, cands[idxs[0]])
-        ests = _batch_hom_group(w, sched, [cands[i] for i in idxs], problem,
-                                cfg, power_cap_mw)
-        for i, est in zip(idxs, ests):
-            out[i] = est
+    metrics_on = _obs_metrics.enabled()
+    t0 = _time.perf_counter() if metrics_on else 0.0
+    with _obs_span("tune.evaluate_batch", workload=w.name,
+                   candidates=len(cands)):
+        out: list[CostEstimate | None] = [None] * len(cands)
+        groups: dict[tuple, list[int]] = {}
+        for i, c in enumerate(cands):
+            if c.islands or c.island_blocks:
+                out[i] = _evaluate(w, c, problem, cfg, power_cap_mw)
+            else:
+                groups.setdefault((c.fuse_fp, c.movers, c.pipelined),
+                                  []).append(i)
+        for idxs in groups.values():
+            sched = tuned_schedule(w, cands[idxs[0]])
+            ests = _batch_hom_group(w, sched, [cands[i] for i in idxs],
+                                    problem, cfg, power_cap_mw)
+            for i, est in zip(idxs, ests):
+                out[i] = est
+    if metrics_on:
+        # Oracle throughput: how fast the batched pricing path is moving.
+        dt = _time.perf_counter() - t0
+        _obs_metrics.inc("tune.oracle.batches")
+        _obs_metrics.inc("tune.oracle.candidates", len(cands))
+        _obs_metrics.observe("tune.oracle.batch_seconds", dt)
+        if dt > 0:
+            _obs_metrics.set_gauge("tune.oracle.candidates_per_sec",
+                                   len(cands) / dt)
     return out

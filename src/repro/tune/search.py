@@ -32,6 +32,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.cluster.topology import SNITCH_CLUSTER, ClusterConfig
+from repro.obs import metrics as _obs_metrics
+from repro.obs.spans import span as _obs_span
 from repro.tune import cache as _cache
 from repro.tune.cost import (OBJECTIVES, CostEstimate, evaluate,
                              evaluate_batch, objective_value)
@@ -168,14 +170,20 @@ def successive_halving(workload: Workload, space: SearchSpace, problem: int,
         rungs += 1
     for r in range(rungs, -1, -1):
         fidelity = max(floor, problem // eta ** r) if r else problem
-        costs = evaluate_batch(workload, cands, fidelity, cfg, power_cap_mw)
+        with _obs_span("tune.search.rung", workload=workload.name, rung=r,
+                       fidelity=fidelity, candidates=len(cands)):
+            costs = evaluate_batch(workload, cands, fidelity, cfg,
+                                   power_cap_mw)
         evals = [Evaluated(c, e) for c, e in zip(cands, costs)]
+        _obs_metrics.inc("tune.search.rungs")
         if r == 0:
+            _obs_metrics.observe("tune.search.rung_survivors", len(evals))
             return _best(evals, objective), evals
         evals.sort(key=lambda e: (not e.cost.feasible,
                                   objective_value(e.cost, objective),
                                   e.candidate.sort_key()))
         cands = [e.candidate for e in evals[:max(1, len(evals) // eta)]]
+        _obs_metrics.observe("tune.search.rung_survivors", len(cands))
     raise AssertionError("unreachable")
 
 
@@ -279,22 +287,26 @@ def tune(workload: Workload | str, problem: int | None = None,
     if store is not None:
         hit = store.get(key)
         if hit is not None:
+            _obs_metrics.inc("tune.cache.hits")
             return TuneResult.from_dict(hit, from_cache=True)
+    _obs_metrics.inc("tune.cache.misses")
 
-    default_ev = Evaluated(space.default,
-                           evaluate(w, space.default, problem, cfg,
-                                    power_cap_mw))
-    if space.size <= EXHAUSTIVE_THRESHOLD:
-        method = "exhaustive"
-        best, evaluated = exhaustive_search(w, space, problem, cfg,
-                                            objective, power_cap_mw)
-    else:
-        method = "halving+local"
-        best, evaluated = successive_halving(w, space, problem, cfg,
-                                             objective, power_cap_mw)
-        best, seen = local_search(w, space, problem, cfg, objective,
-                                  power_cap_mw, start=best.candidate)
-        evaluated += seen
+    with _obs_span("tune.search", workload=w.name, objective=objective,
+                   space_size=space.size):
+        default_ev = Evaluated(space.default,
+                               evaluate(w, space.default, problem, cfg,
+                                        power_cap_mw))
+        if space.size <= EXHAUSTIVE_THRESHOLD:
+            method = "exhaustive"
+            best, evaluated = exhaustive_search(w, space, problem, cfg,
+                                                objective, power_cap_mw)
+        else:
+            method = "halving+local"
+            best, evaluated = successive_halving(w, space, problem, cfg,
+                                                 objective, power_cap_mw)
+            best, seen = local_search(w, space, problem, cfg, objective,
+                                      power_cap_mw, start=best.candidate)
+            evaluated += seen
     # Tuned may equal, but never lose to, the static plan.
     best = _best([best, default_ev], objective)
 

@@ -163,6 +163,28 @@ class TestMemoLayer:
         assert all(s["entries"] == 0 and s["hits"] == 0
                    for s in memo.stats())
 
+    def test_stats_hit_rate_and_entries(self):
+        """stats() derives hit_rate = hits / (hits + misses) per memo,
+        0.0 when the memo was never consulted (no division error), and
+        reports the live entry count — the fields the obs registry
+        snapshots as perf.memo.* gauges."""
+        from repro.core.kernels_isa import copift_schedule
+        from repro.core.timing import copift_block_timing
+        memo.clear_all()
+        for s in memo.stats():
+            assert s["hit_rate"] == 0.0 and s["entries"] == 0
+        copift_block_timing(copift_schedule("expf"), 64)   # all misses
+        copift_block_timing(copift_schedule("expf"), 64)   # timing hit
+        stats = {s["name"]: s for s in memo.stats()}
+        t = stats["timing"]
+        assert t["entries"] >= 1
+        assert t["hit_rate"] == t["hits"] / (t["hits"] + t["misses"])
+        assert 0.0 < t["hit_rate"] < 1.0
+        for s in memo.stats():
+            assert set(s) == {"name", "entries", "hits", "misses",
+                              "hit_rate"}
+            assert 0.0 <= s["hit_rate"] <= 1.0
+
     def test_clear_all_resets_registered_lru_tier(self):
         """clear_all() must reset the whole pricing stack — the subsystem
         lru caches above the memo tables included — so the documented
