@@ -160,10 +160,29 @@ def main(argv=None) -> None:
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="write the structured report as JSON "
                          "('-' for stdout)")
+    ap.add_argument("--history", type=str, default=None, nargs="?",
+                    const="", metavar="PATH",
+                    help="append the overhead figures to the metric "
+                         "history store (repro.obs.history; default path "
+                         "$REPRO_METRIC_HISTORY or ./BENCH_history.jsonl), "
+                         "so the overhead gate itself is trend-tracked")
     args = ap.parse_args(argv)
     doc = generate(smoke=args.smoke, repeats=args.repeats)
     for line in format_lines(doc):
         print(line)
+    if args.history is not None:
+        from repro.obs import history as _history
+        rec = _history.append_record(
+            {k: float(doc[k]) for k in
+             ("reference_seconds", "disabled_seconds", "enabled_seconds",
+              "disabled_overhead", "enabled_overhead")},
+            source="obs_bench",
+            path=args.history or None,
+            meta=dict(smoke=doc["smoke"], repeats=doc["repeats"],
+                      overhead_ok=doc["overhead_ok"],
+                      parity=doc["parity"]))
+        print(f"obs.history,{_history.history_path(args.history or None)},"
+              f"{len(rec['metrics'])}_metrics")
     if args.json:
         if args.json == "-":
             json.dump(doc, sys.stdout, indent=1)

@@ -1,6 +1,19 @@
-"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline analysis from TPU dry-run artifacts — **optional section**.
 
-Per (arch × shape × mesh) cell, the three roofline terms:
+This section predates the RISC-V dual-issue reproduction: it prices
+(arch × shape × mesh) cells from ``experiments/dryrun/*.json`` artifacts
+produced by ``python -m repro.launch.dryrun --all`` on a machine with the
+accelerator toolchain.  Those artifacts are not checked in and are not
+produced by CI, so in a fresh checkout the section *skips gracefully*:
+
+* ``benchmarks/run.py`` catches the ``FileNotFoundError`` from
+  :func:`run` and prints ``roofline.skipped,missing_artifact,...``
+  (the snapshot records ``lines=[]``, which the shape gate treats as
+  "no baseline" rather than a regression);
+* running this file directly prints the same skip line and exits 0
+  instead of dumping a traceback.
+
+Per cell, the three roofline terms:
 
     compute    = FLOPs_per_device / 197e12          (bf16 peak, TPU v5e)
     memory     = HBM_bytes_per_device / 819e9
@@ -9,8 +22,8 @@ Per (arch × shape × mesh) cell, the three roofline terms:
 Sources: collective bytes come from the trip-count-aware HLO parse stored
 by the dry-run; FLOPs/HBM bytes come from the analytic cost model
 (benchmarks/costmodel.py) because ``compiled.cost_analysis()`` counts scan
-bodies once (verified; raw values are still recorded in the artifacts and
-reported here as ``hlo_raw_flops`` for transparency).
+bodies once (raw values are still recorded in the artifacts and reported
+here as ``hlo_raw_flops`` for transparency).
 
 Also reported: MODEL_FLOPS = 6·N·D (6·N_active·D for MoE; 2·N·D for the
 serve cells), the useful-compute ratio MODEL_FLOPS / executed FLOPs (catches
@@ -24,15 +37,22 @@ import glob
 import json
 import os
 
-from benchmarks.costmodel import step_cost
-from repro.configs import SHAPES, load_config
-
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
 LINK_BW = 50e9               # bytes/s / ICI link
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
+
+
+def _deps():
+    """Lazy seed-era imports: ``benchmarks.costmodel`` needs the repo
+    root on ``sys.path`` (``python -m`` or pytest), and deferring them
+    keeps plain ``python benchmarks/roofline.py`` on the graceful-skip
+    path instead of dying on an import before :func:`main` runs."""
+    from benchmarks.costmodel import step_cost
+    from repro.configs import SHAPES, load_config
+    return step_cost, SHAPES, load_config
 
 
 def model_flops(rec: dict, shape) -> float:
@@ -44,6 +64,7 @@ def model_flops(rec: dict, shape) -> float:
 
 
 def analyze_record(rec: dict) -> dict:
+    step_cost, SHAPES, load_config = _deps()
     shape = SHAPES[rec["shape"]]
     cfg = load_config(rec["arch"], "full")
     cost = step_cost(cfg, shape, rec["devices"])
@@ -78,11 +99,15 @@ def load_all(mesh: str | None = None) -> list[dict]:
 
 
 def run() -> list[str]:
+    """CSV section for ``benchmarks/run.py``.  Raises
+    ``FileNotFoundError`` when no artifacts exist — the harness turns
+    that into a ``roofline.skipped`` line (see module docstring)."""
     rows = load_all(mesh="pod")        # the roofline table is single-pod
     if not rows:
         raise FileNotFoundError(
-            f"no dry-run artifacts in {DRYRUN_DIR}; run "
-            "`python -m repro.launch.dryrun --all` first")
+            f"no dry-run artifacts in {os.path.normpath(DRYRUN_DIR)}; "
+            "this optional TPU section needs `python -m "
+            "repro.launch.dryrun --all` run on an accelerator host first")
     lines = ["roofline.arch,shape,compute_s,memory_s,collective_s,dominant,"
              "useful_ratio,roofline_frac,mem_gib,fits_hbm"]
     for r in rows:
@@ -97,5 +122,18 @@ def run() -> list[str]:
     return lines
 
 
+def main() -> int:
+    """Standalone entry point: graceful skip (exit 0) without artifacts,
+    matching the ``benchmarks/run.py`` harness behaviour."""
+    try:
+        lines = run()
+    except FileNotFoundError as e:
+        print(f"roofline.skipped,missing_artifact,{e}")
+        return 0
+    print("\n".join(lines))
+    return 0
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import sys
+    sys.exit(main())

@@ -27,6 +27,11 @@ anything: every numeric field of every CSV line is matched across the two
 files (by the line's non-numeric key columns) and relative deltas beyond
 ``--threshold`` are reported, along with lines that appeared or vanished —
 the perf-trajectory view over the ``BENCH_*.json`` artifacts CI uploads.
+
+``--history [PATH]`` additionally appends the run's numeric fields to the
+append-only JSONL metric store (``repro.obs.history``), and
+``--check-regressions`` gates against the *rolling* baseline over that
+store — catching slow drifts the single-previous-snapshot diff cannot.
 """
 
 from __future__ import annotations
@@ -219,10 +224,23 @@ def main(argv=None) -> None:
                          "cardinality) — the CI perf-trajectory gate; "
                          "numeric drift and entirely new sections stay "
                          "advisory")
+    ap.add_argument("--history", type=str, default=None, nargs="?",
+                    const="", metavar="PATH",
+                    help="append this run's numeric fields to the metric "
+                         "history store (repro.obs.history; default path "
+                         "$REPRO_METRIC_HISTORY or ./BENCH_history.jsonl) "
+                         "— the rolling perf trajectory across commits")
+    ap.add_argument("--check-regressions", action="store_true",
+                    help="after appending (--history), run the "
+                         "rolling-baseline regression gate and exit 1 on "
+                         "any HARD regression (repro.obs.history "
+                         "thresholds: soft 2%%, hard 10%%, window 8)")
     args = ap.parse_args(argv)
 
     if args.fail_on_shape and not args.diff:
         ap.error("--fail-on-shape only applies to --diff")
+    if args.check_regressions and args.history is None:
+        ap.error("--check-regressions requires --history")
     if args.diff:
         if args.threshold < 0:
             ap.error(f"--threshold must be >= 0, got {args.threshold}")
@@ -309,6 +327,22 @@ def main(argv=None) -> None:
             json.dump(snapshot, f, indent=1)
         print(f"benchmarks.snapshot,{args.json},"
               f"{len(snapshot['sections'])}_sections")
+    if args.history is not None:
+        from repro.obs import history as _history
+        rec = _history.append_snapshot(snapshot,
+                                       path=args.history or None)
+        print(f"benchmarks.history,"
+              f"{_history.history_path(args.history or None)},"
+              f"{len(rec['metrics'])}_metrics,"
+              f"sha={(rec['sha'] or 'none')[:12]}")
+        if args.check_regressions:
+            doc = _history.detect_regressions(path=args.history or None)
+            for line in _history.format_regressions(doc):
+                print(line)
+            if not doc["ok"]:
+                print("benchmarks.history_fail,hard regression vs "
+                      "rolling baseline")
+                sys.exit(1)
     if failures:
         print(f"benchmarks.failed,{','.join(failures)},")
         sys.exit(1)

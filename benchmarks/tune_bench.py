@@ -12,11 +12,20 @@ much* above 1 each kernel sits and *which* knob moved (fusion for the
 multi-phase kernels, block size off the Table-I cap when the problem size
 leaves remainder blocks).
 
+With ``--attrib`` every tuned-vs-default row additionally carries an
+*attribution* — the exact stall-category waterfall (``repro.obs.attrib``)
+saying where each kernel's speedup came from (issue slots, RAW, TCDM,
+FREP launch, dual-issue overlap).  It lands in the structured ``--json``
+document (``kernels[i].attribution``) and as a rendered waterfall on
+stderr-adjacent prose lines — never as new CSV rows, so the benchmark
+section's shape stays fixed for the CI diff gate.
+
 CLI:
     PYTHONPATH=src python benchmarks/tune_bench.py              # CSV
     PYTHONPATH=src python benchmarks/tune_bench.py --tiny       # CI smoke
     PYTHONPATH=src python benchmarks/tune_bench.py --json out.json
     PYTHONPATH=src python benchmarks/tune_bench.py --measured   # + wall time
+    PYTHONPATH=src python benchmarks/tune_bench.py --attrib     # + waterfall
 """
 
 from __future__ import annotations
@@ -42,7 +51,8 @@ def _tiny_space(workload):
 
 
 def generate(kernels=None, tiny: bool = False, measured: bool = False,
-             cluster: bool = True, use_cache: bool = False) -> dict:
+             cluster: bool = True, use_cache: bool = False,
+             attrib: bool = False) -> dict:
     """Structured rows for the CSV printer and the --json snapshot."""
     from repro.api import Target, Tuner
     from repro.tune import (BUILTIN_KERNELS, default_space, get_workload,
@@ -66,6 +76,9 @@ def generate(kernels=None, tiny: bool = False, measured: bool = False,
             tuned_cycles=res.best_cost.cycles,
             predicted_speedup=res.predicted_speedup,
             predicted_energy_saving=res.predicted_energy_saving)
+        if attrib:
+            att = tuner.attribute(name, result=res)
+            row["attribution"] = att.to_dict()
         if measured:
             timed = measure_candidates(w, [res.default, res.best])
             if len(timed) == 2:
@@ -119,6 +132,10 @@ def main(argv=None) -> None:
                     help="skip the operating-point subsection")
     ap.add_argument("--cache", action="store_true",
                     help="use the persistent tune cache (default: fresh)")
+    ap.add_argument("--attrib", action="store_true",
+                    help="attach the exact tuned-vs-default attribution "
+                         "waterfall (repro.obs.attrib) to every kernel row "
+                         "and print the rendered waterfalls after the CSV")
     ap.add_argument("--kernels", type=str, default=None,
                     help="comma-separated subset of the built-ins")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -126,9 +143,17 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     kernels = args.kernels.split(",") if args.kernels else None
     doc = generate(kernels=kernels, tiny=args.tiny, measured=args.measured,
-                   cluster=not args.no_cluster, use_cache=args.cache)
+                   cluster=not args.no_cluster, use_cache=args.cache,
+                   attrib=args.attrib)
     for line in format_lines(doc):
         print(line)
+    if args.attrib:
+        from repro.obs.attrib import Attribution
+        for r in doc["kernels"]:
+            att = r.get("attribution")
+            if att:
+                print()
+                print(Attribution.render_dict(att))
     if args.json:
         if args.json == "-":
             json.dump(doc, sys.stdout, indent=1)

@@ -36,7 +36,8 @@ from repro.cluster.report import Report, headline  # noqa: F401  (re-export)
 from repro.cluster.scheduler import assign
 from repro.core.analytics import TABLE_I
 from repro.core.kernels_isa import baseline_trace, copift_schedule
-from repro.core.timing import baseline_timing, copift_block_timing
+from repro.core.timing import (baseline_timing, copift_block_timing,
+                               copift_serial_block_timing)
 from repro.obs import record as _obs_record
 from repro.obs.spans import span as _obs_span
 
@@ -72,11 +73,12 @@ for _c in (_copift_timing, _baseline_timing, _cluster_powers):
 del _c
 
 
-def _compute_cycles(timing_fn, name: str, block: int,
-                    extras: tuple[float, ...], blocks: tuple[int, ...],
-                    speeds: tuple[float, ...], f_ref: float):
+def _compute_cycles(timing_fn, extras: tuple[float, ...],
+                    blocks: tuple[int, ...], speeds: tuple[float, ...],
+                    f_ref: float):
     """Reference-clock compute latency over the active cores, plus one
-    block's instruction count.  ``extras``/``blocks``/``speeds`` are
+    block's instruction count.  ``timing_fn(extra_contention)`` returns the
+    per-block ``BlockTiming``; ``extras``/``blocks``/``speeds`` are
     parallel over the *active* cores only.
 
     The per-core finish times are reduced vectorized: cores at the
@@ -84,7 +86,7 @@ def _compute_cycles(timing_fn, name: str, block: int,
     float round-trip — the homogeneous bit-for-bit reduction), slower
     cores scale by ``f_ref/f`` in float64 exactly as the scalar
     expression did."""
-    bts = [timing_fn(name, block, e) for e in extras]
+    bts = [timing_fn(e) for e in extras]
     instrs = bts[-1].instrs
     finish = np.asarray([bt.cycles for bt in bts], dtype=np.int64) \
         * np.asarray(blocks, dtype=np.int64)
@@ -99,15 +101,58 @@ def _compute_cycles(timing_fn, name: str, block: int,
     return latest, instrs
 
 
+def _resolve_plan(spec, plan):
+    """Canonicalize a tuner candidate for the cluster path.
+
+    Only the *plan* knobs (block, FP fusion, mover demotion, pipelining)
+    travel with the candidate — the cluster itself (cores, operating
+    points, strategy) is the ``Target``'s job, so island layouts are
+    rejected and ``n_cores``/``point`` are ignored."""
+    from repro.tune.cost import _access_profile, _canonicalize, tuned_schedule
+    w = spec.get_workload()
+    plan = _canonicalize(w, plan)
+    if plan.islands or plan.island_blocks:
+        raise ValueError(
+            "plan carries DVFS-island knobs (islands/island_blocks); "
+            "express the cluster through the Target's core points instead")
+    sched = tuned_schedule(w, plan)
+    return plan, sched, _access_profile(w, sched, plan.block)
+
+
+def _plan_cluster_power(cfg, spec, sched, block, act_points) -> float:
+    """COPIFT cluster power for a rewritten plan schedule: the cost
+    oracle's component model per PE, re-expressed at each active core's
+    operating point (mirrors ``tune.cost._evaluate_het``'s grouping)."""
+    from repro.cluster.dvfs import scale_breakdown
+    from repro.tune.cost import _core_power
+    pb = _core_power(spec.get_workload(), sched, block)
+    counts: dict = {}
+    for p in act_points:
+        counts[p] = counts.get(p, 0) + 1
+    return sum(n * scale_breakdown(pb, p, cfg.nominal).total
+               for p, n in counts.items())
+
+
 def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
              blocks_per_core: int = 1,
-             total_blocks: int | None = None) -> Report:
+             total_blocks: int | None = None,
+             plan=None) -> Report:
     """Evaluate one kernel on one target; the facade's front door.
 
     Weak scaling by default (``blocks_per_core`` blocks per core); pass
     ``total_blocks`` for strong scaling (fixed work, split by the target's
     strategy).  Every block is the kernel's Table-I max block, as in the
     single-PE ``evaluate_kernel``.
+
+    ``plan`` routes a tuner candidate (:class:`repro.tune.Candidate`)
+    through this same cluster path: the schedule is rewritten by
+    ``tune.cost.tuned_schedule``, the block size is the plan's, inter-core
+    TCDM contention comes from the rewritten schedule's own access
+    profile, and COPIFT power from the oracle's component model at each
+    core's point — so a tuned and a default plan produce directly
+    comparable ``Report``\\ s (the input to ``obs.attrib``).  ``plan=None``
+    is the registry default and stays bit-for-bit the historical path.
+    The RV32G baseline side is never plan-transformed.
     """
     spec = kernel(spec)
     if not spec.simulatable:
@@ -122,7 +167,14 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
     core_points = target.core_points
     speeds = tuple(p.freq_ghz for p in core_points)
     f_ref = max(speeds)
-    block = TABLE_I[name].max_block
+    if plan is None:
+        plan_sched = plan_profile = None
+        pipelined = True
+        block = TABLE_I[name].max_block
+    else:
+        plan, plan_sched, plan_profile = _resolve_plan(spec, plan)
+        pipelined = plan.pipelined
+        block = plan.block
     if total_blocks is None:
         total_blocks = blocks_per_core * cfg.n_cores
     if total_blocks < 1:
@@ -137,27 +189,43 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
         act_speeds = tuple(speeds[i] for i in active)
         act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
         act_points = tuple(core_points[i] for i in active)
-        extras_c = copift_extra_contention_het(cfg, name, act_speeds)
+        if plan is None:
+            extras_c = copift_extra_contention_het(cfg, name, act_speeds)
+            copift_fn = lambda e: _copift_timing(name, block, e)  # noqa: E731
+        else:
+            extras_c = tuple(
+                plan_profile.extra_stalls_het(cfg, act_speeds, pos)
+                for pos in range(len(act_speeds)))
+            timing = (copift_block_timing if pipelined
+                      else copift_serial_block_timing)
+            copift_fn = lambda e: timing(  # noqa: E731
+                plan_sched, block, extra_contention=e)
         extras_b = baseline_extra_contention_het(cfg, name, act_speeds)
 
-        compute_c, instrs_c = _compute_cycles(_copift_timing, name, block,
-                                              extras_c, act_blocks,
-                                              act_speeds, f_ref)
-        compute_b, instrs_b = _compute_cycles(_baseline_timing, name, block,
-                                              extras_b, act_blocks,
-                                              act_speeds, f_ref)
+        compute_c, instrs_c = _compute_cycles(copift_fn, extras_c,
+                                              act_blocks, act_speeds, f_ref)
+        compute_b, instrs_b = _compute_cycles(
+            lambda e: _baseline_timing(name, block, e), extras_b,
+            act_blocks, act_speeds, f_ref)
         total_elems = block * total_blocks
         transfer = transfer_cycles(cfg, kernel_bytes(name, total_elems))
         cycles_c = max(compute_c, transfer)
         cycles_b = max(compute_b, transfer)
         uniform = len(set(speeds)) == 1
-        power_b, power_c = _cluster_powers(cfg, name, act_points)
+        if plan is None:
+            power_b, power_c = _cluster_powers(cfg, name, act_points)
+        else:
+            power_b = het_cluster_power_mw(cfg, name, act_points,
+                                           copift=False)
+            power_c = _plan_cluster_power(cfg, spec, plan_sched, block,
+                                          act_points)
 
         rec = _obs_record.active_recorder()
         if rec is not None:
-            _trace_evaluate(rec, name, block, active, act_speeds, act_blocks,
-                            extras_c, extras_b, f_ref, transfer, total_blocks,
-                            cycles_c, cycles_b)
+            _trace_evaluate(rec, name, plan_sched, block, pipelined, active,
+                            act_speeds, act_blocks, extras_c, extras_b,
+                            f_ref, transfer, total_blocks, cycles_c,
+                            cycles_b)
 
     return Report(
         name=name, strategy=target.strategy, core_points=core_points,
@@ -177,9 +245,9 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
         power_copift_mw=power_c)
 
 
-def _trace_evaluate(rec, name, block, active, act_speeds, act_blocks,
-                    extras_c, extras_b, f_ref, transfer, total_blocks,
-                    cycles_c, cycles_b) -> None:
+def _trace_evaluate(rec, name, sched, block, pipelined, active, act_speeds,
+                    act_blocks, extras_c, extras_b, f_ref, transfer,
+                    total_blocks, cycles_c, cycles_b) -> None:
     """Record the per-core cycle accounting of one traced evaluate.
 
     Re-runs the COPIFT/baseline block timings with lanes scoped per core so
@@ -190,16 +258,22 @@ def _trace_evaluate(rec, name, block, active, act_speeds, act_blocks,
     served ``_compute_cycles`` (pure functions of kernel/block/contention;
     pinned in ``tests/test_obs.py``), and the memo tables are consulted for
     provenance only, never bypassed.  Lane names are sequence-numbered so
-    back-to-back evaluates in one session never mix aggregates."""
+    back-to-back evaluates in one session never mix aggregates.
+
+    ``sched`` is the (possibly plan-rewritten) COPIFT schedule, or ``None``
+    for the registry default; ``pipelined`` picks the Step-5 combinator and
+    is stamped per core as ``combine`` ("max" | "sum") so ``reconcile`` and
+    ``attrib`` replay the right identity."""
     seq = len(rec.summaries)
-    sched = copift_schedule(name)
+    if sched is None:
+        sched = copift_schedule(name)
+    timing = copift_block_timing if pipelined else copift_serial_block_timing
     btrace = baseline_trace(name)
     cores = []
     for pos, i in enumerate(active):
         scope = f"eval{seq}.core{i}"
         with rec.lane(scope):
-            bt = copift_block_timing(sched, block,
-                                     extra_contention=extras_c[pos])
+            bt = timing(sched, block, extra_contention=extras_c[pos])
             bb = baseline_timing(btrace, block,
                                  extra_contention=extras_b[pos])
         prefix = f"{scope}/"
@@ -212,6 +286,7 @@ def _trace_evaluate(rec, name, block, active, act_speeds, act_blocks,
                           extra_contention_base=extras_b[pos],
                           block_cycles=bt.cycles, int_cycles=bt.int_cycles,
                           fp_cycles=bt.fp_cycles, base_cycles=bb.cycles,
+                          combine="max" if pipelined else "sum",
                           lanes=lanes))
     rec.summary(dict(kind="evaluate", name=name, block=block,
                      total_blocks=total_blocks, ref_freq_ghz=f_ref,

@@ -150,6 +150,45 @@ class Tuner:
                 res = self._refine_island_blocks(spec, res, objective)
         return res
 
+    def attribute(self, spec: "KernelSpec | Workload | str",
+                  result: TuneResult | None = None, *,
+                  problem: int | None = None, which: str = "copift"):
+        """Where did the tuned plan's speedup come from?
+
+        Returns an :class:`repro.obs.attrib.Attribution` — the exact
+        stall-category waterfall between ``result.default`` and
+        ``result.best`` (``result=None`` runs :meth:`plan` first).
+        Simulatable registry kernels are priced through the full traced
+        ``api.evaluate`` path on this tuner's target, so the step deltas
+        sum bit-for-bit to the ``Report`` cycle delta; tuner-only
+        workloads (``softmax``, ``prng``) get the per-block decomposition
+        (``obs.attrib.attribute_plans``).
+        """
+        from repro.obs.attrib import attribute_evaluate, attribute_plans
+        w = self._workload(spec)
+        if result is None:
+            result = self.plan(spec, problem=problem)
+        sp = None
+        if isinstance(sp_in := spec, KernelSpec):
+            sp = sp_in
+        elif isinstance(spec, str):
+            try:
+                sp = kernel(spec)
+            except KeyError:
+                sp = None
+        with _obs_span("tuner.attribute", workload=w.name,
+                       evaluate_path=bool(sp is not None and sp.simulatable)):
+            if sp is not None and sp.simulatable:
+                att = attribute_evaluate(
+                    sp, self.target, self.target,
+                    plan_a=result.default, plan_b=result.best,
+                    which=which, label_a="default", label_b="tuned")
+            else:
+                att = attribute_plans(w, result.default, result.best)
+        att.meta.setdefault("predicted_speedup", result.predicted_speedup)
+        att.meta.setdefault("method", result.method)
+        return att
+
     def _refine_island_blocks(self, spec, res: TuneResult,
                               objective: str) -> TuneResult:
         """Per-island block refinement of a heterogeneous winner.

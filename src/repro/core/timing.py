@@ -471,6 +471,55 @@ def copift_block_timing(sched: CopiftSchedule, block: int,
         fp_cycles=fp_cycles, instrs=instrs))
 
 
+def copift_serial_block_timing(sched: CopiftSchedule, block: int,
+                               extra_contention: float = 0.0) -> BlockTiming:
+    """Per-block cost with Step-5 pipelining *off* (paper Fig. 1f): every
+    phase runs to completion on each block, so there is no int/FP overlap
+    and no first-FREP-iteration handoff — the FP phases pay all ``block``
+    iterations themselves and the block total is the **sum** of the two
+    threads plus the per-block bookkeeping.
+
+    This is the serial branch of the cost oracle's per-core pricing
+    (``tune.cost._per_core_cycles``), promoted into the timing model so
+    unpipelined candidates share the content-addressed timing memo and
+    trace onto the same ``int``/``fpss`` lanes as
+    :func:`copift_block_timing` (the serialized summaries carry
+    ``combine="sum"``, which ``obs.export.reconcile`` and the attribution
+    waterfall understand).
+    """
+    key = (sched.fingerprint(), "serial", block, extra_contention)
+    rec = _active_recorder()
+    hit = TIMING_MEMO.lookup(key)
+    if hit is not None and rec is None:
+        return hit
+    oh = sched.block_overhead_instrs()
+    contention = (0.25 if sched.n_ssrs else 0.0) + extra_contention
+    if rec is None:
+        int_blk = thread_cycles(sched.int_body, block,
+                                tcdm_contention=contention)
+        fp_blk = sum(thread_cycles(b, block) for b in sched.fp_bodies)
+    else:
+        with rec.lane("int"):
+            int_blk = thread_cycles(sched.int_body, block,
+                                    tcdm_contention=contention)
+            rec.annotate("block_overhead", oh)
+        with rec.lane("fpss"):
+            fp_blk = sum(thread_cycles(b, block) for b in sched.fp_bodies)
+    cycles = int_blk + oh + fp_blk
+    instrs = (sched.n_int + sched.n_fp) * block + oh
+    if rec is not None:
+        rec.block_record(name=sched.name, kind="serial", block=block,
+                         extra_contention=extra_contention,
+                         provenance="hit" if hit is not None else "cold",
+                         int_cycles=int_blk + oh, fp_cycles=fp_blk,
+                         cycles=cycles)
+        if hit is not None:
+            return hit
+    return TIMING_MEMO.store(key, BlockTiming(
+        cycles=cycles, int_cycles=int_blk + oh, fp_cycles=fp_blk,
+        instrs=instrs))
+
+
 def baseline_timing(trace: KernelTrace, n: int = 1,
                     extra_contention: float = 0.0) -> BlockTiming:
     cycles = simulate_single_issue(trace.instrs, n,

@@ -24,18 +24,34 @@ record hit/cold provenance, with parity pinned in ``tests/test_obs.py``.
 Exports go to Perfetto/Chrome-trace JSON (:meth:`Session.save`) or a
 terminal timeline; ``python -m repro.obs.trace <kernel>`` does both from
 the command line.
+
+On top of the single-run layers sit the *differential* ones:
+
+* **attribution** (``obs.attrib``) — exact stall-category waterfalls
+  between two traced runs (plan A vs plan B, Target A vs B), step deltas
+  summing bit-for-bit to the ``Report`` cycle delta;
+* **history** (``obs.history``) — an append-only JSONL metric store with
+  rolling-baseline regression detection (the CI gate);
+* **report** (``obs.report``) — a self-contained HTML report (timeline,
+  stall bars, waterfall, trend sparklines) plus a terminal summary.
 """
 
 from repro.obs import record as record              # noqa: F401
 from repro.obs import metrics as metrics            # noqa: F401
 from repro.obs import spans as spans                # noqa: F401
 from repro.obs import export as export              # noqa: F401
+from repro.obs import attrib as attrib              # noqa: F401
+from repro.obs import history as history            # noqa: F401
 from repro.obs.record import (TraceRecorder, active_recorder,  # noqa: F401
                               hooks_bypassed, recording)
 from repro.obs.metrics import REGISTRY              # noqa: F401
 from repro.obs.spans import span                    # noqa: F401
 from repro.obs.export import (chrome_trace, reconcile,  # noqa: F401
                               render_timeline, save_chrome_trace)
+from repro.obs.attrib import (Attribution, attribute,  # noqa: F401
+                              attribute_evaluate, attribute_plans)
+from repro.obs.history import (append_snapshot, detect_regressions,  # noqa: F401,E501
+                               read_history)
 from repro.obs.session import Session, session      # noqa: F401
 
 __all__ = [
@@ -43,4 +59,7 @@ __all__ = [
     "TraceRecorder", "active_recorder", "recording", "hooks_bypassed",
     "REGISTRY", "chrome_trace", "save_chrome_trace", "render_timeline",
     "reconcile", "record", "metrics", "spans", "export",
+    "Attribution", "attribute", "attribute_evaluate", "attribute_plans",
+    "attrib", "history", "append_snapshot", "detect_regressions",
+    "read_history",
 ]

@@ -191,7 +191,8 @@ def reconcile(trace, report=None) -> dict:
     sums = [s for s in _summaries(trace) if s.get("kind") == "evaluate"]
     if report is not None:
         sums = [s for s in sums if s["name"] == report.name
-                and s["total_blocks"] == report.total_blocks]
+                and s["total_blocks"] == report.total_blocks
+                and s.get("block", report.block) == report.block]
         sums = sums[-1:]
     if not sums:
         return {"ok": False, "checks": [
@@ -226,9 +227,16 @@ def reconcile(trace, report=None) -> dict:
                 check(f"baseline_lane_cycles[{cid}]",
                       int(_lane_thread_cycles(lanes["rv32g"])),
                       core["base_cycles"])
-            check(f"dual_issue_max[{cid}]",
-                  max(core["int_cycles"], core["fp_cycles"]),
-                  core["block_cycles"])
+            if core.get("combine", "max") == "sum":
+                # Step-5 pipelining off (paper Fig. 1f): the int and FP
+                # phases serialize instead of overlapping.
+                check(f"serial_phase_sum[{cid}]",
+                      core["int_cycles"] + core["fp_cycles"],
+                      core["block_cycles"])
+            else:
+                check(f"dual_issue_max[{cid}]",
+                      max(core["int_cycles"], core["fp_cycles"]),
+                      core["block_cycles"])
             finish_c.append((core["block_cycles"] * core["blocks"],
                              core["freq_ghz"]))
             finish_b.append((core["base_cycles"] * core["blocks"],

@@ -19,11 +19,13 @@ Two paths, matching the facade's split:
 CLI:
     PYTHONPATH=src python -m repro.obs.trace expf --out trace.json
     PYTHONPATH=src python -m repro.obs.trace softmax --cores 8
+    PYTHONPATH=src python -m repro.obs.trace expf --json   # machine-readable
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -67,6 +69,10 @@ def main(argv=None) -> int:
                     help="weak-scaling blocks per core (default 1)")
     ap.add_argument("--out", type=str, default=None, metavar="PATH",
                     help="write the Perfetto/Chrome-trace JSON here")
+    ap.add_argument("--json", action="store_true",
+                    help="print a machine-readable JSON document (lane "
+                         "aggregates, reconcile verdict, result figures) "
+                         "to stdout instead of the terminal timeline")
     ap.add_argument("--width", type=int, default=100,
                     help="terminal timeline width (default 100)")
     args = ap.parse_args(argv)
@@ -78,6 +84,34 @@ def main(argv=None) -> int:
     except KeyError:
         ap.error(f"unknown kernel {args.kernel!r}; "
                  f"known: {', '.join(_kernel_names())}")
+
+    if args.json:
+        rec = sess.recorder
+        doc = {
+            "schema": 1,
+            "kernel": args.kernel,
+            "cores": args.cores,
+            "blocks_per_core": args.blocks_per_core,
+            "simulatable": checks is not None,
+            "lane_micro": {k: dict(v) for k, v in rec.lane_micro.items()},
+            "memo_provenance": dict(rec.memo_provenance),
+            "dropped_events": rec.dropped_events,
+            "n_events": len(rec.events),
+            "n_summaries": len(rec.summaries),
+            "reconcile": None if checks is None else {
+                "ok": checks["ok"], "n_checks": len(checks["checks"])},
+            "result": ({"cycles_copift": result.cycles_copift,
+                        "cycles_base": result.cycles_base,
+                        "speedup": result.speedup}
+                       if checks is not None else
+                       {"cycles": result.cycles,
+                        "energy_uj": getattr(result, "energy_uj", None),
+                        "feasible": getattr(result, "feasible", None)}),
+        }
+        print(json.dumps(doc, indent=1, default=float))
+        if args.out:
+            sess.save(args.out)
+        return 0 if checks is None or checks["ok"] else 1
 
     print(sess.timeline(width=args.width))
     print()

@@ -55,7 +55,7 @@ from repro.core.energy import (L0_CAPACITY, P_CONST, P_DMA, P_FETCH_FREP,
 from repro.core.isa import Instr, count_mem_accesses
 from repro.core.timing import (PROGRAM_PROLOGUE_CYCLES, CopiftSchedule,
                                copift_block_timing, copift_problem_timing,
-                               thread_cycles)
+                               copift_serial_block_timing)
 from repro.obs import metrics as _obs_metrics
 from repro.obs.spans import span as _obs_span
 from repro.perf.memo import register_cache as _register_cache
@@ -126,12 +126,11 @@ def _per_core_cycles(sched: CopiftSchedule, blocks_per_core: int, block: int,
         return bt.cycles
     # Serial (Fig. 1f): every phase runs to completion on each block; no
     # int/FP overlap, but also no first-FREP-iteration handoff and the
-    # smaller Step-4 buffer set.
-    contention = (0.25 if sched.n_ssrs else 0.0) + extra_contention
-    int_blk = thread_cycles(sched.int_body, block, tcdm_contention=contention)
-    fp_blk = sum(thread_cycles(b, block) for b in sched.fp_bodies)
-    per_block = int_blk + sched.block_overhead_instrs() + fp_blk
-    return PROGRAM_PROLOGUE_CYCLES + blocks_per_core * per_block
+    # smaller Step-4 buffer set.  The per-block cost lives in the timing
+    # model (shared memo, traced lanes) — same arithmetic as before.
+    bt = copift_serial_block_timing(sched, block,
+                                    extra_contention=extra_contention)
+    return PROGRAM_PROLOGUE_CYCLES + blocks_per_core * bt.cycles
 
 
 def _access_profile(workload: Workload, sched: CopiftSchedule,

@@ -1,0 +1,237 @@
+"""``repro.obs.attrib`` — differential cycle attribution must be EXACT.
+
+The contract: for any two traced evaluations (plan A vs plan B on one
+target, or one kernel on Target A vs Target B), the waterfall's step
+deltas — computed as exact ``Fraction``s over the recorded lane
+aggregates — sum **bit-for-bit** to the ``Report`` cycle delta, with
+every endpoint/side-consistency check green (``Attribution.exact``).
+"No attribution" is a valid answer only as an exception, never as an
+inexact waterfall.
+
+Pinned here:
+
+1. tuned-vs-default exactness for every simulatable+tunable kernel, on
+   homogeneous and DVFS-island targets, under every scheduling strategy,
+   for both the COPIFT and the rv32g-baseline decomposition;
+2. Target-vs-Target attribution (the "what did the big.LITTLE layout
+   buy" question);
+3. per-block plan attribution for every tunable workload (including the
+   tuner-only ones with no cluster Report);
+4. a hypothesis property over random plan knobs: *any* pair of valid
+   plans attributes exactly;
+5. serialization (to_dict / from_dict / render_dict) preserving the
+   exact verdict, and the ``Tuner.attribute`` front door.
+"""
+
+from dataclasses import replace
+from fractions import Fraction
+
+import pytest
+
+from repro import api, obs
+from repro.cluster.scheduler import STRATEGIES
+from repro.obs.attrib import (Attribution, attribute_evaluate,
+                              attribute_plans)
+from repro.tune import default_space, get_workload
+from tests._hypothesis_compat import given, settings, st
+
+SIM_TUNABLE = ("expf", "logf", "pi_xoshiro128p")
+ALL_WORKLOADS = ("expf", "logf", "montecarlo", "prng", "softmax")
+HET_SPEC = "2@1.45GHz@1.00V,6@0.50GHz@0.60V"
+
+
+def _workload(name):
+    """Workload by name, resolving kernel names (``pi_xoshiro128p`` →
+    ``montecarlo``) through the registry."""
+    try:
+        return get_workload(name)
+    except KeyError:
+        from repro.api.registry import kernel
+        return kernel(name).get_workload()
+
+
+def _tuned(name):
+    """A plan that differs from the default without a tuner search:
+    drop one block rung and flip fusion where the space allows it."""
+    w = _workload(name)
+    space = default_space(w)
+    d = space.default
+    blocks = space.knob("block").values
+    block = blocks[-2] if len(blocks) > 1 else d.block
+    return w, d, replace(d, block=block)
+
+
+def _assert_exact(att):
+    assert att.exact, [c for c in att.checks if not c["ok"]]
+    total = sum((s.delta for s in att.steps), Fraction(0))
+    assert total == Fraction(att.cycles_b) - Fraction(att.cycles_a)
+
+
+class TestEvaluateAttribution:
+    @pytest.mark.parametrize("name", SIM_TUNABLE)
+    @pytest.mark.parametrize("which", ["copift", "base"])
+    def test_plan_vs_plan_homogeneous(self, name, which):
+        _, d, t = _tuned(name)
+        att = attribute_evaluate(name, plan_a=d, plan_b=t, which=which)
+        _assert_exact(att)
+        assert att.kind == "evaluate" and att.which == which
+        # the endpoints are the actual Reports' cycle figures
+        field = f"cycles_{which}"
+        assert att.cycles_a == getattr(att.report_a, field)
+        assert att.cycles_b == getattr(att.report_b, field)
+
+    @pytest.mark.parametrize("name", SIM_TUNABLE)
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_plan_vs_plan_het_all_strategies(self, name, strategy):
+        target = api.Target.heterogeneous(HET_SPEC, strategy=strategy)
+        _, d, t = _tuned(name)
+        for which in ("copift", "base"):
+            att = attribute_evaluate(name, target, target,
+                                     plan_a=d, plan_b=t, which=which)
+            _assert_exact(att)
+
+    @pytest.mark.parametrize("name", ["expf", "logf", "poly_lcg", "pi_lcg",
+                                      "poly_xoshiro128p", "pi_xoshiro128p"])
+    def test_every_simulatable_kernel_target_vs_target(self, name):
+        """Every registered simulatable kernel attributes exactly — the
+        non-tunable ones (no plan space) through the Target-vs-Target
+        door, both decompositions sharing one pair of traces."""
+        from repro.obs.attrib import attribute
+        a = api.Target.homogeneous(n_cores=8)
+        b = api.Target.heterogeneous(HET_SPEC)
+        with obs.session() as sa:
+            rep_a = api.evaluate(name, a)
+        with obs.session() as sb:
+            rep_b = api.evaluate(name, b)
+        for which in ("copift", "base"):
+            _assert_exact(attribute(sa.recorder, sb.recorder, rep_a, rep_b,
+                                    which=which))
+
+    @pytest.mark.parametrize("which", ["copift", "base"])
+    def test_target_vs_target(self, which):
+        """Homogeneous vs big.LITTLE: the schedule step carries the
+        frequency/blocks move, and the waterfall still telescopes."""
+        a = api.Target.homogeneous(n_cores=8)
+        b = api.Target.heterogeneous(HET_SPEC)
+        att = attribute_evaluate("expf", a, b, which=which,
+                                 label_a="hom8", label_b="big.LITTLE")
+        _assert_exact(att)
+        assert att.label_a == "hom8" and att.label_b == "big.LITTLE"
+        assert any(s.name == "schedule" for s in att.steps)
+
+    def test_serialized_vs_pipelined_plan(self):
+        """pipelined=False (Fig. 1f) vs the default: the dual-issue
+        overlap step explains the difference between sum- and
+        max-combined phases, exactly."""
+        w = get_workload("logf")
+        d = default_space(w).default
+        serial = replace(d, pipelined=False)
+        att = attribute_evaluate("logf", plan_a=serial, plan_b=d)
+        _assert_exact(att)
+        assert att.cycles_b <= att.cycles_a  # overlap never hurts
+        overlap = [s for s in att.steps if s.name == "dual_issue_overlap"]
+        assert overlap and overlap[0].delta <= 0
+
+    def test_identity_attribution_is_all_zeros(self):
+        w = get_workload("expf")
+        d = default_space(w).default
+        att = attribute_evaluate("expf", plan_a=d, plan_b=d)
+        _assert_exact(att)
+        assert att.delta == 0
+        assert all(s.delta == 0 for s in att.steps)
+
+    def test_island_plans_rejected(self):
+        w = get_workload("expf")
+        d = default_space(w).default
+        bad = replace(d, islands=(("1.00GHz", 4),))
+        with pytest.raises(ValueError, match="island"):
+            attribute_evaluate("expf", plan_a=d, plan_b=bad)
+
+
+class TestPlanAttribution:
+    @pytest.mark.parametrize("name", ALL_WORKLOADS)
+    def test_all_workloads_exact(self, name):
+        """Per-block attribution covers the tuner-only workloads too
+        (softmax, prng: no ISA baseline, no cluster Report)."""
+        w, d, t = _tuned(name)
+        att = attribute_plans(w, d, t)
+        _assert_exact(att)
+        assert att.kind == "plan"
+        assert att.meta["block_a"] == d.block
+        assert att.meta["block_b"] == t.block
+
+    def test_accepts_workload_name(self):
+        _, d, t = _tuned("softmax")
+        att = attribute_plans("softmax", d, t)
+        _assert_exact(att)
+
+    @settings(max_examples=15, deadline=None)
+    @given(name=st.sampled_from(ALL_WORKLOADS),
+           block_idx_a=st.integers(0, 7), block_idx_b=st.integers(0, 7),
+           fuse_a=st.booleans(), fuse_b=st.booleans(),
+           pipe_a=st.booleans(), pipe_b=st.booleans())
+    def test_property_random_plan_pairs_exact(self, name, block_idx_a,
+                                              block_idx_b, fuse_a, fuse_b,
+                                              pipe_a, pipe_b):
+        """ANY pair of valid plans attributes exactly — including
+        serialized-vs-pipelined crossings, where the waterfall walks
+        through the serialized sandwich."""
+        w = get_workload(name)
+        space = default_space(w)
+        blocks = space.knob("block").values
+        d = space.default
+        a = replace(d, block=blocks[block_idx_a % len(blocks)],
+                    fuse_fp=fuse_a, pipelined=pipe_a)
+        b = replace(d, block=blocks[block_idx_b % len(blocks)],
+                    fuse_fp=fuse_b, pipelined=pipe_b)
+        _assert_exact(attribute_plans(w, a, b))
+
+
+class TestAttributionObject:
+    def _any(self):
+        _, d, t = _tuned("logf")
+        return attribute_evaluate("logf", plan_a=d, plan_b=t)
+
+    def test_to_dict_json_roundtrip_preserves_exact(self):
+        import json
+        att = self._any()
+        doc = json.loads(json.dumps(att.to_dict()))
+        assert doc["exact"] is True
+        back = Attribution.from_dict(doc)
+        _assert_exact(back)
+        assert back.cycles_a == att.cycles_a
+        assert [s.name for s in back.steps] == [s.name for s in att.steps]
+        assert all(sa.delta == sb.delta
+                   for sa, sb in zip(att.steps, back.steps))
+
+    def test_render_and_render_dict_agree(self):
+        att = self._any()
+        text = att.render()
+        assert "exact=True" in text and att.kernel in text
+        assert Attribution.render_dict(att.to_dict()) == text
+
+    def test_speedup_and_delta(self):
+        att = self._any()
+        assert att.delta == att.cycles_b - att.cycles_a
+        assert att.speedup == pytest.approx(att.cycles_a / att.cycles_b)
+
+
+class TestTunerAttribute:
+    def test_simulatable_kernel_goes_through_reports(self):
+        att = api.Tuner().attribute("expf")
+        _assert_exact(att)
+        assert att.kind == "evaluate"
+        assert att.label_a == "default" and att.label_b == "tuned"
+        assert "predicted_speedup" in att.meta
+
+    def test_tuner_only_kernel_goes_through_blocks(self):
+        att = api.Tuner().attribute("softmax")
+        _assert_exact(att)
+        assert att.kind == "plan"
+
+    def test_accepts_precomputed_result(self):
+        tuner = api.Tuner()
+        res = tuner.plan("softmax")
+        att = tuner.attribute("softmax", result=res)
+        _assert_exact(att)
+        assert att.meta["plan_b"] == res.best.to_dict()

@@ -1,0 +1,404 @@
+"""``repro.obs.history`` — the append-only metric store and its
+rolling-baseline regression gate, plus the writers that feed it
+(``benchmarks/run.py --history``, ``obs_bench --history``) and the HTML
+report that reads it.
+
+The contract: appends are one JSONL line per run (SHA + timestamp +
+source + flat metrics); reads tolerate corruption; the gate compares
+each source's newest record against the *median* of up to ``window``
+prior records, with per-metric direction rules — and only HARD
+(>= 10 %) moves of deterministic metrics fail a build.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.obs import history
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _append_run(path, speedup, cycles=1000.0, seconds=1.0, ts=0.0,
+                source="bench"):
+    return history.append_record(
+        {"tune/expf/speedup": speedup, "fig2/expf/cycles": cycles,
+         "perf/oracle/batch_seconds": seconds},
+        source=source, path=path, sha="deadbeef", ts=ts)
+
+
+class TestStore:
+    def test_append_read_roundtrip(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        rec = history.append_record({"a/b": 1.5, "c/d": 2},
+                                    source="s", path=p, sha="abc", ts=42.0)
+        assert rec["schema"] == history.SCHEMA
+        assert rec["metrics"] == {"a/b": 1.5, "c/d": 2.0}
+        back = history.read_history(p)
+        assert back == [rec]
+        assert history.read_history.skipped == 0
+
+    def test_append_is_append_only(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(3):
+            _append_run(p, 1.5, ts=float(i))
+        recs = history.read_history(p)
+        assert [r["ts"] for r in recs] == [0.0, 1.0, 2.0]
+
+    def test_corrupt_and_truncated_lines_skipped(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        _append_run(p, 1.5, ts=0.0)
+        with open(p, "a") as f:
+            f.write('{"truncated": \n')          # interrupted write
+            f.write("not json at all\n")
+            f.write('{"no_metrics_key": 1}\n')
+            f.write("\n")                         # blank: ignored, not counted
+        _append_run(p, 1.4, ts=1.0)
+        recs = history.read_history(p)
+        assert len(recs) == 2
+        assert history.read_history.skipped == 3
+
+    def test_missing_file_is_empty_history(self, tmp_path):
+        assert history.read_history(tmp_path / "nope.jsonl") == []
+
+    def test_source_filter(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        _append_run(p, 1.5, source="a")
+        _append_run(p, 1.4, source="b")
+        assert len(history.read_history(p, source="a")) == 1
+
+    def test_path_resolution_env_var(self, tmp_path, monkeypatch):
+        assert history.history_path("x.jsonl") == "x.jsonl"
+        monkeypatch.setenv(history.ENV_VAR, str(tmp_path / "env.jsonl"))
+        assert history.history_path() == str(tmp_path / "env.jsonl")
+        monkeypatch.delenv(history.ENV_VAR)
+        assert history.history_path() == history.DEFAULT_FILENAME
+
+
+class TestFlattenSnapshot:
+    def test_keys_mirror_diff_identity(self):
+        snap = {"schema": 1, "sections": {
+            "fig2": {"lines": ["fig2.expf,speedup,1.50",
+                               "fig2.expf,speedup,1.40",   # repeated key
+                               "fig2.logf,ipc,0.9,1.1"]},
+            "perf": {"lines": [], "error": "skipped"},
+        }}
+        flat = history.flatten_snapshot(snap)
+        assert flat == {
+            "fig2/fig2.expf,speedup/c2": 1.50,
+            "fig2/fig2.expf,speedup@1/c2": 1.40,
+            "fig2/fig2.logf,ipc/c2": 0.9,
+            "fig2/fig2.logf,ipc/c3": 1.1,
+        }
+
+    def test_header_line_names_columns(self):
+        """A section whose first line is a pure CSV header (table1, fig2,
+        tune, obs all emit one) names its numeric columns after the
+        header tokens — that's what lets the direction rules recognize
+        cycles/speedup metrics in real snapshots."""
+        snap = {"sections": {"tune": {"lines": [
+            "tune.kernel,block,default_cycles,predicted_speedup",
+            "tune.expf,157,744552,1.0003",
+            "tune.softmax,136,746597,1.0018,9.9",  # extra col: cN fallback
+        ]}}}
+        flat = history.flatten_snapshot(snap)
+        assert flat == {
+            "tune/tune.expf/block": 157.0,
+            "tune/tune.expf/default_cycles": 744552.0,
+            "tune/tune.expf/predicted_speedup": 1.0003,
+            "tune/tune.softmax/block": 136.0,
+            "tune/tune.softmax/default_cycles": 746597.0,
+            "tune/tune.softmax/predicted_speedup": 1.0018,
+            "tune/tune.softmax/c4": 9.9,
+        }
+        assert history.metric_direction(
+            "tune/tune.expf/default_cycles") == "higher_worse"
+        assert history.metric_direction(
+            "tune/tune.expf/predicted_speedup") == "lower_worse"
+
+    def test_non_finite_values_dropped(self):
+        snap = {"sections": {"s": {"lines": ["k,inf,nan,2.0"]}}}
+        assert history.flatten_snapshot(snap) == {"s/k/c3": 2.0}
+
+    def test_percent_tokens_are_data_not_identity(self):
+        """``+29.5%``-style tokens (the obs section emits them) parse as
+        numeric columns — left in the key they would mint a fresh metric
+        name every run, so the overhead trend could never be checked."""
+        snap = {"sections": {"obs": {"lines": [
+            "obs.overhead,mode,seconds,overhead_vs_reference",
+            "obs.overhead,disabled,0.703,+29.5%",
+        ]}}}
+        assert history.flatten_snapshot(snap) == {
+            "obs/obs.overhead,disabled/seconds": 0.703,
+            "obs/obs.overhead,disabled/overhead_vs_reference": 29.5,
+        }
+
+    def test_append_snapshot_records_sections(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        snap = {"sections": {"fig2": {"lines": ["fig2.expf,speedup,1.5"]}}}
+        rec = history.append_snapshot(snap, path=p)
+        assert rec["source"] == "benchmarks.run"
+        assert rec["meta"]["sections"] == ["fig2"]
+
+
+class TestDirectionRules:
+    @pytest.mark.parametrize("name,want", [
+        ("perf/oracle/batch_seconds", "advisory"),
+        ("perf/oracle/candidates_per_sec", "advisory"),
+        ("tune/measured_default_us/c3", "advisory"),
+        ("obs_bench/disabled_overhead", "advisory"),
+        ("tune/expf/speedup", "lower_worse"),
+        ("fig2/expf/ipc", "lower_worse"),
+        ("tune/point/saving_vs_nominal", "lower_worse"),
+        ("fig2/expf/cycles", "higher_worse"),
+        ("table1/expf/energy_uj", "higher_worse"),
+        ("cluster/expf/power_mw", "higher_worse"),
+        ("something/else/entirely", "advisory"),
+    ])
+    def test_first_match_classification(self, name, want):
+        assert history.metric_direction(name) == want
+
+
+class TestDetectRegressions:
+    def test_needs_two_records(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        _append_run(p, 1.5)
+        doc = history.detect_regressions(path=p)
+        assert doc["ok"] and doc["checked"] == 0
+
+    def test_hard_speedup_drop_fails(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(4):
+            _append_run(p, 1.5, ts=float(i))
+        _append_run(p, 1.25, ts=9.0)              # -16.7% vs median 1.5
+        doc = history.detect_regressions(path=p)
+        assert not doc["ok"]
+        (r,) = [r for r in doc["regressions"] if r["severity"] == "hard"]
+        assert r["metric"] == "tune/expf/speedup"
+        assert r["direction"] == "lower_worse"
+        assert r["rel_delta"] == pytest.approx(-1 / 6)
+
+    def test_soft_band_reports_without_gating(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(4):
+            _append_run(p, 1.5, ts=float(i))
+        _append_run(p, 1.5, cycles=1040.0, ts=9.0)   # cycles +4%: soft
+        doc = history.detect_regressions(path=p)
+        assert doc["ok"]
+        assert [r["severity"] for r in doc["regressions"]] == ["soft"]
+
+    def test_advisory_metrics_never_gate(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(4):
+            _append_run(p, 1.5, seconds=1.0, ts=float(i))
+        _append_run(p, 1.5, seconds=40.0, ts=9.0)    # +3900% wall time
+        doc = history.detect_regressions(path=p)
+        assert doc["ok"]
+        assert [r["severity"] for r in doc["regressions"]] == ["info"]
+
+    def test_improvements_counted_not_flagged(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(4):
+            _append_run(p, 1.5, ts=float(i))
+        _append_run(p, 2.0, cycles=800.0, ts=9.0)
+        doc = history.detect_regressions(path=p)
+        assert doc["ok"] and not doc["regressions"]
+        assert doc["improvements"] == 2
+
+    def test_median_baseline_resists_one_bad_run(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i, s in enumerate((1.5, 1.5, 0.1, 1.5)):   # one poisoned run
+            _append_run(p, s, ts=float(i))
+        _append_run(p, 1.5, ts=9.0)
+        doc = history.detect_regressions(path=p)
+        assert doc["ok"] and not doc["regressions"]    # median still 1.5
+
+    def test_window_bounds_the_baseline(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(6):
+            _append_run(p, 3.0, ts=float(i))           # ancient glory
+        for i in range(8):
+            _append_run(p, 1.5, ts=10.0 + i)           # recent normal
+        _append_run(p, 1.5, ts=99.0)
+        doc = history.detect_regressions(path=p, window=8)
+        assert doc["ok"] and not doc["regressions"]
+
+    def test_sources_isolated(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(3):
+            _append_run(p, 1.5, ts=float(i), source="a")
+        _append_run(p, 99.0, ts=5.0, source="b")       # one record: no base
+        _append_run(p, 1.5, ts=6.0, source="a")
+        doc = history.detect_regressions(path=p)
+        assert doc["ok"] and doc["sources"] == {"a": 4, "b": 1}
+
+    def test_new_metric_skipped_zero_baseline_inf(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        history.append_record({"x/cycles": 0.0}, source="s", path=p, ts=0.0)
+        history.append_record({"x/cycles": 0.0, "y/cycles": 5.0},
+                              source="s", path=p, ts=1.0)
+        doc = history.detect_regressions(path=p)
+        assert doc["ok"] and doc["checked"] == 1       # y is new: skipped
+        history.append_record({"x/cycles": 1.0}, source="s", path=p, ts=2.0)
+        doc = history.detect_regressions(path=p)
+        assert not doc["ok"]                           # 0 -> 1 is inf, hard
+        assert doc["regressions"][0]["rel_delta"] == float("inf")
+
+    def test_threshold_validation(self):
+        with pytest.raises(ValueError, match="soft"):
+            history.detect_regressions([], soft=0.2, hard=0.1)
+
+    def test_format_lines(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        for i in range(3):
+            _append_run(p, 1.5, ts=float(i))
+        _append_run(p, 1.0, ts=9.0)
+        lines = history.format_regressions(history.detect_regressions(path=p))
+        assert lines[0].startswith("history.checked,")
+        assert any(ln.startswith("history.hard,") for ln in lines)
+
+
+class TestCli:
+    def test_check_exits_1_on_hard(self, tmp_path, capsys):
+        p = tmp_path / "h.jsonl"
+        for i in range(3):
+            _append_run(p, 1.5, ts=float(i))
+        _append_run(p, 1.0, ts=9.0)
+        with pytest.raises(SystemExit) as ei:
+            history.main(["--path", str(p), "--check"])
+        assert ei.value.code == 1
+        assert "history.fail" in capsys.readouterr().out
+
+    def test_check_clean_exits_0(self, tmp_path, capsys):
+        p = tmp_path / "h.jsonl"
+        for i in range(3):
+            _append_run(p, 1.5, ts=float(i))
+        history.main(["--path", str(p), "--check"])
+        assert "history.clean" in capsys.readouterr().out
+
+    def test_store_summary(self, tmp_path, capsys):
+        p = tmp_path / "h.jsonl"
+        _append_run(p, 1.5, source="bench")
+        history.main(["--path", str(p)])
+        out = capsys.readouterr().out
+        assert "history.store," in out and "history.source,bench," in out
+
+
+class TestWriters:
+    def test_run_py_history_appends_and_gates(self, tmp_path):
+        """`benchmarks.run --history --check-regressions` end to end:
+        appends the snapshot's metrics and runs the gate (clean here —
+        a single record has no baseline)."""
+        p = tmp_path / "h.jsonl"
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run",
+             "--sections", "table1", "--json", str(tmp_path / "s.json"),
+             "--history", str(p), "--check-regressions"],
+            capture_output=True, text=True, cwd=REPO, check=True)
+        assert "benchmarks.history," in out.stdout
+        assert "history.checked,0" in out.stdout
+        recs = history.read_history(p)
+        assert len(recs) == 1 and recs[0]["source"] == "benchmarks.run"
+        assert any(k.startswith("table1/") for k in recs[0]["metrics"])
+
+    def test_check_regressions_requires_history(self):
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--check-regressions"],
+            capture_output=True, text=True, cwd=REPO)
+        assert out.returncode != 0
+        assert "--check-regressions requires --history" in out.stderr
+
+    def test_run_py_hard_regression_fails_build(self, tmp_path):
+        """Seed the store with a fabricated too-good baseline for one
+        deterministic fig2 speedup metric; the real run must then trip
+        the hard gate and exit 1."""
+        p = tmp_path / "h.jsonl"
+        s1 = tmp_path / "s1.json"
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--sections", "fig2",
+             "--json", str(s1), "--history", str(p)],
+            capture_output=True, text=True, cwd=REPO, check=True)
+        real = history.read_history(p)[0]["metrics"]
+        name = next(k for k in sorted(real) if k.endswith("/speedup"))
+        for i in range(3):  # fabricated history: 40% faster than reality
+            history.append_record({name: real[name] * 1.4},
+                                  source="benchmarks.run", path=p,
+                                  ts=float(i))
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--sections", "fig2",
+             "--json", str(tmp_path / "s2.json"),
+             "--history", str(p), "--check-regressions"],
+            capture_output=True, text=True, cwd=REPO)
+        assert out.returncode == 1
+        assert "benchmarks.history_fail" in out.stdout
+        assert f"history.hard,benchmarks.run,{name}" in out.stdout
+
+    def test_obs_bench_smoke_appends_overhead(self, tmp_path):
+        """The history append happens (and is well-formed) regardless of
+        the wall-clock gate: with --repeats 1 the 5% overhead check can
+        flake under load, and that exit-1 path must *still* have written
+        the record first (the trend is most valuable on bad runs).  A
+        parity failure, by contrast, is a real bug and fails here."""
+        p = tmp_path / "h.jsonl"
+        out = subprocess.run(
+            [sys.executable, str(REPO / "benchmarks" / "obs_bench.py"),
+             "--smoke", "--repeats", "1", "--history", str(p)],
+            capture_output=True, text=True, cwd=REPO,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+        assert "obs.fail,observed results diverged" not in out.stdout
+        assert out.returncode == 0 or "overhead" in out.stdout.splitlines()[-1], \
+            out.stdout + out.stderr
+        assert "obs.history," in out.stdout
+        (rec,) = history.read_history(p)
+        assert rec["source"] == "obs_bench"
+        assert set(rec["metrics"]) == {
+            "reference_seconds", "disabled_seconds", "enabled_seconds",
+            "disabled_overhead", "enabled_overhead"}
+        assert rec["meta"]["parity"]
+        assert rec["meta"]["overhead_ok"] == (out.returncode == 0)
+
+
+class TestHtmlReport:
+    def test_save_report_self_contained(self, tmp_path):
+        from repro import api, obs
+        from repro.obs.report import save_report
+        with obs.session() as sess:
+            api.evaluate("expf", api.Target.homogeneous(n_cores=2))
+        p = tmp_path / "h.jsonl"
+        for i, s in enumerate((1.5, 1.5, 1.5, 1.2)):
+            _append_run(p, s, ts=float(i))
+        out = tmp_path / "r.html"
+        save_report(out, trace=sess.recorder, history=p)
+        html = out.read_text()
+        assert html.lstrip().lower().startswith("<!doctype html>")
+        assert "<svg" in html                      # timeline + sparklines
+        assert "Metric trends" in html
+        assert "tune/expf/speedup" in html
+        assert "src=" not in html and "href=" not in html  # self-contained
+
+    def test_report_cli_writes_and_exits_0(self, tmp_path):
+        from repro.obs.report import main
+        p = tmp_path / "h.jsonl"
+        for i in range(2):
+            _append_run(p, 1.5, ts=float(i))
+        out = tmp_path / "r.html"
+        assert main(["expf", "--cores", "2", "--history", str(p),
+                     "--out", str(out)]) == 0
+        assert out.stat().st_size > 10_000
+
+    def test_terminal_summary_sections(self, tmp_path):
+        from repro import api, obs
+        from repro.obs.report import terminal_summary
+        with obs.session() as sess:
+            api.evaluate("expf", api.Target.homogeneous(n_cores=2))
+        p = tmp_path / "h.jsonl"
+        for i in range(2):
+            _append_run(p, 1.5, ts=float(i))
+        from repro.obs.history import read_history
+        text = terminal_summary(trace=sess.recorder,
+                                history=read_history(p))
+        assert "issue timeline" in text
+        assert "history.checked" in text

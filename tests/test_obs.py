@@ -363,6 +363,28 @@ class TestTraceCli:
         with pytest.raises(SystemExit):
             main(["nosuchkernel"])
 
+    def test_json_output_simulatable(self, tmp_path, capsys):
+        """--json prints a machine-readable doc (and --out still writes
+        the Perfetto trace alongside it)."""
+        from repro.obs.trace import main
+        out = tmp_path / "t.json"
+        assert main(["expf", "--cores", "2", "--json",
+                     "--out", str(out)]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["schema"] == 1 and doc["kernel"] == "expf"
+        assert doc["simulatable"] and doc["reconcile"]["ok"]
+        assert doc["result"]["cycles_copift"] > 0
+        assert doc["result"]["speedup"] > 1
+        assert doc["lane_micro"] and doc["n_summaries"] >= 1
+        assert json.loads(out.read_text())["traceEvents"]
+
+    def test_json_output_tuner_only(self, capsys):
+        from repro.obs.trace import main
+        assert main(["softmax", "--json"]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert not doc["simulatable"] and doc["reconcile"] is None
+        assert doc["result"]["cycles"] > 0
+
 
 # ---------------------------------------------------------------------------
 # 7. Serve-engine instrumentation + error-message satellite
@@ -424,3 +446,117 @@ class TestBenchSatellites:
         lines = format_lines(doc)
         assert any("obs.gate" in ln and "True" in ln for ln in lines)
         assert any("obs.parity" in ln for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# 9. Export edge cases (S3)
+# ---------------------------------------------------------------------------
+
+class TestExportEdgeCases:
+    def test_chrome_trace_pinned_key_set(self):
+        """The export schema is a contract for downstream tooling: the
+        top-level and otherData key sets are pinned exactly."""
+        with obs.session(metrics=True) as sess:
+            api.evaluate("expf", api.Target.homogeneous(n_cores=2))
+        doc = obs.chrome_trace(sess.recorder)
+        assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+        assert set(doc["otherData"]) == {
+            "memo_provenance", "dropped_events", "lane_micro",
+            "block_records", "summaries"}
+        with_metrics = obs.chrome_trace(sess.recorder,
+                                        metrics_snapshot={"g": 1.0})
+        assert set(with_metrics["otherData"]) == {
+            "memo_provenance", "dropped_events", "lane_micro",
+            "block_records", "summaries", "metrics"}
+        # and the whole thing stays JSON-serializable
+        json.dumps(doc)
+
+    @pytest.mark.parametrize("width", [1, 2, 3, 7])
+    def test_render_timeline_tiny_widths(self, width):
+        """Degenerate widths must render (clamped), never raise."""
+        with obs.session() as sess:
+            api.evaluate("expf", api.Target.homogeneous(n_cores=2))
+        text = obs.render_timeline(sess.recorder, width=width)
+        for lane_bit in ("int", "fpss", "rv32g"):
+            assert lane_bit in text
+        bars = [ln for ln in text.splitlines() if "|" in ln]
+        assert bars  # every lane row draws its (tiny) bar
+
+    def test_render_timeline_empty_recorder(self):
+        rec = obs.TraceRecorder()
+        assert obs.render_timeline(rec) == "(no lanes recorded)"
+
+    def test_reconcile_empty_trace(self):
+        """No evaluate summaries: reconcile reports a structured failure,
+        never raises."""
+        rec = obs.TraceRecorder()
+        res = obs.reconcile(rec)
+        assert not res["ok"] and res["summaries"] == 0
+        assert res["checks"][0]["name"] == "summary_present"
+        # exported-dict flavor of the same emptiness
+        res2 = obs.reconcile(obs.chrome_trace(rec))
+        assert not res2["ok"] and res2["summaries"] == 0
+
+    def test_reconcile_exact_despite_dropped_events(self):
+        """Micro-event caps drop events, never aggregates: a trace that
+        dropped events still reconciles exactly against its Report."""
+        with obs.session(max_events_per_stream=8, max_events=64) as sess:
+            report = api.evaluate("expf", api.Target.homogeneous(n_cores=8))
+        assert sess.recorder.dropped_events > 0
+        res = sess.reconcile(report)
+        assert res["ok"], [c for c in res["checks"] if not c["ok"]]
+        # and the timeline notes the drop instead of hiding it
+        assert "dropped" in obs.render_timeline(sess.recorder)
+
+
+# ---------------------------------------------------------------------------
+# 10. Plan-transformed evaluate: traced parity + serial combine
+# ---------------------------------------------------------------------------
+
+class TestEvaluatePlanTraced:
+    def test_default_plan_matches_plain_evaluate(self):
+        """evaluate(plan=default candidate) is the identity transform —
+        bit-for-bit the plain report, traced or not."""
+        from repro.tune import default_space, get_workload
+        w = get_workload("expf")
+        default = default_space(w).default
+        target = api.Target.homogeneous(n_cores=4)
+        memo.clear_all()
+        plain = api.evaluate("expf", target)
+        with obs.session() as sess:
+            planned = api.evaluate("expf", target, plan=default)
+        assert planned == plain
+        assert sess.reconcile(planned)["ok"]
+
+    def test_serial_plan_reconciles_with_sum_combine(self):
+        """pipelined=False (paper Fig. 1f) serializes the int/FP phases:
+        the traced summary records combine='sum' and reconcile checks
+        int+fp == block_cycles instead of max(int, fp)."""
+        from dataclasses import replace
+        from repro.tune import default_space, get_workload
+        w = get_workload("logf")
+        serial = replace(default_space(w).default, pipelined=False)
+        with obs.session() as sess:
+            report = api.evaluate("logf", api.Target.homogeneous(n_cores=2),
+                                  plan=serial)
+        s = sess.recorder.summaries[-1]
+        assert all(c["combine"] == "sum" for c in s["cores"])
+        res = sess.reconcile(report)
+        assert res["ok"], [c for c in res["checks"] if not c["ok"]]
+        assert any(c["name"].startswith("serial_phase_sum")
+                   for c in res["checks"])
+        # serializing can never beat the pipelined overlap
+        with obs.session():
+            piped = api.evaluate("logf", api.Target.homogeneous(n_cores=2))
+        assert report.cycles_copift >= piped.cycles_copift
+
+    def test_island_plans_rejected(self):
+        """evaluate(plan=) prices plan knobs only; DVFS-island knobs
+        belong to the cluster scheduler and are rejected loudly."""
+        from dataclasses import replace
+        from repro.tune import default_space, get_workload
+        w = get_workload("expf")
+        cand = replace(default_space(w).default, islands=(("1.00GHz", 4),))
+        with pytest.raises(ValueError, match="island"):
+            api.evaluate("expf", api.Target.homogeneous(n_cores=4),
+                         plan=cand)
