@@ -12,6 +12,10 @@ Prints ``name,value,derived`` CSV lines:
   * perf.*         — timing-engine throughput (repro.perf memo + batched
                      oracle vs the cold-cache path) — the tooling's own
                      performance trajectory
+  * serve.*        — discrete-event serving simulator: autoscaling
+                     policies (static / reactive / mpc) racing a p99 SLO
+                     on a bursty trace, with the acceptance inequality
+                     (mpc meets the SLO static misses, at <= energy)
   * roofline.*     — TPU v5e roofline terms from the dry-run artifacts
                      (skipped with a notice until launch/dryrun.py has run)
 
@@ -44,7 +48,8 @@ import traceback
 
 def _sections() -> list[tuple[str, object]]:
     from benchmarks import (cluster_sweep, fig2, fig3, kernels_bench,
-                            obs_bench, perf_bench, table1, tune_bench)
+                            obs_bench, perf_bench, serve_bench, table1,
+                            tune_bench)
     sections = [
         ("table1", table1.run),
         ("fig2", fig2.run),
@@ -54,6 +59,7 @@ def _sections() -> list[tuple[str, object]]:
         ("tune", tune_bench.run),
         ("perf", perf_bench.run),
         ("obs", obs_bench.run),
+        ("serve", serve_bench.run),
     ]
     try:
         from benchmarks import roofline
@@ -80,6 +86,9 @@ def _structured(name: str):
     if name == "obs":
         from benchmarks import obs_bench
         return obs_bench.structured()
+    if name == "serve":
+        from benchmarks import serve_bench
+        return serve_bench.structured()
     return None
 
 

@@ -33,6 +33,7 @@ from repro.api.registry import KernelSpec, kernel
 from repro.api.target import Target
 from repro.obs.spans import span as _obs_span
 from repro.tune import cache as _tune_cache
+from repro.tune.cost import constrain_latency
 from repro.tune.cost import evaluate_batch as _cost_evaluate_batch
 from repro.tune.cost import objective_value
 from repro.tune.search import (TuneResult, select_block,
@@ -95,13 +96,20 @@ class Tuner:
     def plan(self, spec: "KernelSpec | Workload | str",
              problem: int | None = None, objective: str | None = None,
              cluster: bool = False, space=None,
-             measure_top_k: int = 0) -> TuneResult:
+             measure_top_k: int = 0,
+             latency_ns: float | None = None) -> TuneResult:
         """Joint plan-knob search (block, fusion, movers, pipelining; plus
-        cores x DVFS when ``cluster=True``) — the old ``tune()``."""
+        cores x DVFS when ``cluster=True``) — the old ``tune()``.
+
+        ``latency_ns`` bounds the search: the winner is the best plan by
+        the objective *among those finishing within the bound* (the
+        ``"energy@time<=..."`` objective grammar, composed for you)."""
         w = self._workload(spec)
+        objective = objective or self.objective or "cycles"
+        if latency_ns is not None:
+            objective = constrain_latency(objective, latency_ns)
         with _obs_span("tuner.plan", workload=w.name, cluster=cluster):
-            return tune(w, problem=problem,
-                        objective=objective or self.objective or "cycles",
+            return tune(w, problem=problem, objective=objective,
                         cfg=self.target.cluster, cluster=cluster,
                         power_cap_mw=self.target.power_cap_mw,
                         space=space, cache=self.cache,
@@ -126,15 +134,24 @@ class Tuner:
                         objective: str | None = None,
                         heterogeneous: bool = False,
                         max_islands: int = 2,
-                        per_island_blocks: bool = False) -> TuneResult:
+                        per_island_blocks: bool = False,
+                        latency_ns: float | None = None) -> TuneResult:
         """Cluster operating-point selection under the target's power cap.
 
         ``heterogeneous=True`` searches DVFS-island layouts and weighted
         scheduling strategies (a strict superset of the homogeneous
         ladder); ``per_island_blocks=True`` additionally refines the
         winning multi-island layout with per-island block sizes.
+        ``latency_ns`` turns the selection into the serving question —
+        *minimum energy among the operating points finishing within the
+        bound* ("p99 <= X ms at minimum energy", with the bound applied
+        to the priced problem's service time) — via the
+        ``"energy@time<=..."`` objective grammar; with no point fast
+        enough the selection degrades to the fastest feasible one.
         """
         objective = objective or self.objective or "energy"
+        if latency_ns is not None:
+            objective = constrain_latency(objective, latency_ns)
         w = self._workload(spec)
         with _obs_span("tuner.operating_point", workload=w.name,
                        heterogeneous=heterogeneous,

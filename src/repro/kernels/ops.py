@@ -80,7 +80,7 @@ def set_impl(impl: str) -> None:
     _IMPL_DEFAULT = impl
 
 
-def set_tuned_defaults(enable: bool = True) -> None:
+def set_tuned_defaults(enable: bool = True) -> bool:
     """Let the autotuner (``repro.tune``) pick the kernels' default block
     tiling — the process-wide default, visible from every thread.  Entry
     points called without an explicit ``block_rows`` then scale the module
@@ -90,10 +90,16 @@ def set_tuned_defaults(enable: bool = True) -> None:
     searches and the rest are free.  Prefer the scoped
     ``repro.api.config(...)`` unless the enablement must outlive a
     ``with`` block (e.g. ``ServeEngine`` setup, whose jit traces resolve
-    tilings lazily at first generate, possibly on another thread)."""
+    tilings lazily at first generate, possibly on another thread).
+
+    Returns the *previous* process-wide default, so callers that must use
+    the persistent setter can still restore the state they found
+    (``ServeEngine.close()`` does exactly this)."""
     global _TUNED_DEFAULT
+    prev = _TUNED_DEFAULT
     _TUNED_DEFAULT = bool(enable)
     _tuned_block_rows.cache_clear()
+    return prev
 
 
 @contextlib.contextmanager

@@ -58,6 +58,15 @@ DIRECTION_RULES: tuple = (
     ("*ipc*", "lower_worse"),
     ("*saving*", "lower_worse"),
     ("*cycles*", "higher_worse"),
+    # Serving-simulator quality figures (benchmarks/serve_bench.py):
+    # latency percentiles and drops are deterministic model outputs, so
+    # any upward drift is a real serving regression; ``slo_met`` is a
+    # 0/1 flag that must not fall.  These sit before the generic energy/
+    # power rules only for documentation — the directions agree.
+    ("*p99*", "higher_worse"),
+    ("*latency*", "higher_worse"),
+    ("*dropped*", "higher_worse"),
+    ("*slo_met*", "lower_worse"),
     ("*energy*", "higher_worse"),
     ("*power*", "higher_worse"),
     ("*", "advisory"),
@@ -89,17 +98,19 @@ def flatten_snapshot(snapshot: dict) -> dict:
     Keys mirror ``benchmarks.run``'s diff identity — the section, the
     line's non-numeric columns, and an occurrence counter for repeated
     keys (``@occ`` only when a key repeats).  The last path component
-    names the numeric column: when the section's first line is a pure
-    CSV header (no numeric fields, as ``table1``/``fig2``/``tune``/
-    ``obs`` emit), its tokens name the columns —
+    names the numeric column: a pure CSV header line (no numeric
+    fields, as ``table1``/``fig2``/``tune``/``obs`` emit) names the
+    columns of the data lines that follow it —
     ``fig2/fig2.expf/speedup``-style — which is what gives the
-    ``DIRECTION_RULES`` their teeth; headerless sections fall back to
+    ``DIRECTION_RULES`` their teeth.  A section may switch headers
+    mid-stream (``perf``/``serve`` emit several row shapes); each
+    header governs until the next one.  Headerless data falls back to
     the column index (``fig2/expf,ipc@1/c2``-style).
     """
     out: dict = {}
     seen: dict = {}
     for section, entry in snapshot.get("sections", {}).items():
-        header: "list | None" = None
+        header: list = []
         for line in entry.get("lines") or []:
             key_cols: list = []
             values: list = []
@@ -112,10 +123,9 @@ def flatten_snapshot(snapshot: dict) -> dict:
                                             else tok)))
                 except ValueError:
                     key_cols.append(tok)
-            if header is None:
-                header = [] if values else toks
-                if not values:
-                    continue       # the header line itself carries no data
+            if not values:
+                header = toks  # a new header line; carries no data itself
+                continue
             key = (section, tuple(key_cols))
             occ = seen.get(key, 0)
             seen[key] = occ + 1

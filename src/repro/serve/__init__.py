@@ -1,1 +1,25 @@
-"""serve substrate (see DESIGN.md §4)."""
+"""serve substrate (see DESIGN.md §4): the decode engine
+(``serve.engine``) plus the discrete-event serving simulator —
+arrival traces (``serve.traffic``), the event loop and service pricer
+(``serve.sim``), and autoscaling policies (``serve.policies``).
+
+The engine is deliberately NOT imported here: it pulls in the model
+stack (jax tracing), while the simulator runs purely on the analytic
+cost models — ``from repro.serve import simulate`` must stay cheap.
+"""
+
+from repro.serve.policies import (POLICIES, ModelPredictivePolicy, Policy,
+                                  ReactivePolicy, StaticPolicy,
+                                  plan_for_rate, plan_grid)
+from repro.serve.sim import (PERCENTILES, PolicyContext, ServicePricer,
+                             SimReport, SloSpec, SlotPlan, simulate)
+from repro.serve.traffic import (TRACE_FAMILIES, Request, Trace,
+                                 make_trace)
+
+__all__ = [
+    "Request", "Trace", "make_trace", "TRACE_FAMILIES",
+    "SloSpec", "SlotPlan", "PolicyContext", "ServicePricer", "SimReport",
+    "simulate", "PERCENTILES",
+    "Policy", "StaticPolicy", "ReactivePolicy", "ModelPredictivePolicy",
+    "plan_grid", "plan_for_rate", "POLICIES",
+]

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import functools
 import time
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -56,6 +57,21 @@ def make_prefill(cfg: ModelConfig):
     return prefill
 
 
+def _mix32(*words: int) -> int:
+    """Fold a tuple of ints into one well-scrambled uint32 stream seed
+    (murmur3-finalizer avalanche per word).  Pure Python with explicit
+    32-bit masking, so slot indices, steps and prompt hashes of any
+    magnitude mix without numpy overflow semantics."""
+    h = 0x9E3779B9
+    for w in words:
+        h = (h ^ (int(w) & 0xFFFFFFFF)) & 0xFFFFFFFF
+        h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+        h ^= h >> 13
+        h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+        h ^= h >> 16
+    return h
+
+
 @dataclass
 class GenerationResult:
     tokens: np.ndarray            # (B, prompt+generated)
@@ -63,11 +79,17 @@ class GenerationResult:
 
 
 class ServeEngine:
-    """Batched greedy/temperature decoding over a fixed slot set."""
+    """Batched greedy/temperature decoding over a fixed slot set.
+
+    ``autotune=True`` flips a process-wide kernel-config default (see
+    ``__init__``); use the engine as a context manager or call
+    :meth:`close` to restore it.
+    """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
                  batch: int = 4, temperature: float = 0.0, seed: int = 0,
-                 autotune: bool = False, power_cap_mw: float | None = None):
+                 autotune: bool = False, power_cap_mw: float | None = None,
+                 persist_tuned_defaults: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -77,6 +99,9 @@ class ServeEngine:
         self.autotune = autotune
         self.power_cap_mw = power_cap_mw
         self.operating_plan = None
+        self._prev_tuned: bool | None = None
+        self._persist_tuned = persist_tuned_defaults
+        self._closed = False
         if power_cap_mw is not None and not autotune:
             raise ValueError(
                 f"power_cap_mw={power_cap_mw} only constrains the autotuned "
@@ -90,11 +115,12 @@ class ServeEngine:
             # tiling once (cached) before the jit traces below bake it in.
             # The context-scoped ``repro.api.config`` would not outlive
             # __init__, while the traces resolve tilings lazily at the
-            # first generate() — so this uses the persistent setter for
-            # the current context; revert with
-            # ``repro.kernels.ops.set_tuned_defaults(False)``.
+            # first generate() — so this uses the persistent setter and
+            # records the value it displaced; ``close()`` (or exiting the
+            # engine's ``with`` block) restores it, unless the caller
+            # opted out via ``persist_tuned_defaults=True``.
             from repro import api
-            kops.set_tuned_defaults(True)
+            self._prev_tuned = kops.set_tuned_defaults(True)
             # Also pick the cluster operating plan for the decode-hot
             # kernels: the heterogeneous (DVFS-island) search with
             # per-island block refinement, which never scores worse than
@@ -129,27 +155,85 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill(cfg))
         self._step = jax.jit(make_serve_step(cfg))
 
-    def _sample(self, logits: jax.Array, step: int) -> jax.Array:
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Undo the engine's process-wide side effect.
+
+        ``autotune=True`` enables tuned kernel defaults through the
+        persistent setter (the jit traces resolve tilings lazily,
+        possibly on another thread, so a scoped override cannot cover
+        them); ``close()`` restores whatever value that setter displaced,
+        so building an autotuned engine no longer flips the default for
+        every later caller in the process.  Idempotent.  The escape
+        hatch ``persist_tuned_defaults=True`` keeps the enablement alive
+        past ``close()`` — for setups that deliberately build one
+        throwaway engine to warm the process-wide tuned state.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        if self._prev_tuned is not None and not self._persist_tuned:
+            kops.set_tuned_defaults(self._prev_tuned)
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    # -- decoding -----------------------------------------------------------
+
+    def _slot_seeds(self, prompts: np.ndarray) -> list[int]:
+        """One PRNG stream seed per slot, decorrelated across
+        (engine seed, slot index, prompt content): two engines sharing a
+        seed but decoding different prompts draw independent Gumbel
+        noise instead of the identical ``seed + step`` sequence."""
+        rows = np.ascontiguousarray(prompts, dtype=np.int32)
+        return [_mix32(self.seed, slot, zlib.crc32(rows[slot].tobytes()))
+                for slot in range(rows.shape[0])]
+
+    def _sample(self, logits: jax.Array, step: int,
+                slot_seeds: list[int]) -> jax.Array:
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1)
-        # Gumbel trick with xoshiro uniforms (the paper's PRNG).
-        u = kops.uniform(self.seed + step, logits.shape)
+        # Gumbel trick with xoshiro uniforms (the paper's PRNG), one
+        # counter stream per (engine, slot, step).
+        u = jnp.stack([kops.uniform(_mix32(s, step), logits.shape[-1:])
+                       for s in slot_seeds])
         g = -jnp.log(-jnp.log(jnp.maximum(u, 1e-12)))
         return jnp.argmax(logits / self.temperature + g, axis=-1)
 
     def generate(self, prompts: np.ndarray, n_steps: int) -> GenerationResult:
-        """prompts: (B, P) int32; greedy-decodes n_steps tokens."""
+        """prompts: (B, P) int32; decodes exactly ``n_steps`` tokens.
+        ``n_steps=0`` returns the prompt unchanged (no prefill, no
+        sampled token)."""
+        prompts = np.asarray(prompts)
         B, plen = prompts.shape
-        assert B == self.batch and plen + n_steps <= self.max_len
+        if B != self.batch:
+            raise ValueError(
+                f"prompts batch dimension is {B}, but this engine was "
+                f"built with batch={self.batch}; rebuild the engine or "
+                f"re-batch the prompts.")
+        if n_steps < 0:
+            raise ValueError(f"n_steps={n_steps} must be >= 0")
+        if plen + n_steps > self.max_len:
+            raise ValueError(
+                f"prompt length {plen} + n_steps={n_steps} = "
+                f"{plen + n_steps} exceeds max_len={self.max_len}; raise "
+                f"max_len or decode fewer steps.")
+        toks = jnp.asarray(prompts, jnp.int32)
+        if n_steps == 0:
+            return GenerationResult(np.asarray(toks), 0)
+        slot_seeds = self._slot_seeds(prompts)
         cache = make_cache(self.cfg, B, self.max_len)
-        logits, cache = self._prefill(self.params, cache,
-                                      jnp.asarray(prompts, jnp.int32))
-        out = [jnp.asarray(prompts, jnp.int32)]
-        tok = self._sample(logits, 0)[:, None]
-        for i in range(1, n_steps):
+        logits, cache = self._prefill(self.params, cache, toks)
+        out = [toks]
+        for i in range(n_steps):
+            tok = self._sample(logits, i, slot_seeds)[:, None]
             out.append(tok)
-            logits, cache = self._step(self.params, cache, tok,
-                                       jnp.int32(plen + i - 1))
-            tok = self._sample(logits, i)[:, None]
-        out.append(tok)
+            if i + 1 < n_steps:
+                logits, cache = self._step(self.params, cache, tok,
+                                           jnp.int32(plen + i))
         return GenerationResult(np.asarray(jnp.concatenate(out, 1)), n_steps)

@@ -39,7 +39,8 @@ strictly generalizes the paper's static rule.
 """
 
 from repro.tune.cache import TuneCache, cache_key, default_cache
-from repro.tune.cost import CostEstimate, evaluate, objective_value
+from repro.tune.cost import (CostEstimate, constrain_latency, evaluate,
+                             meets_latency, objective_value, parse_objective)
 from repro.tune.search import (Evaluated, TuneResult, exhaustive_search,
                                local_search, measure_candidates,
                                select_block, select_operating_point,
@@ -51,7 +52,8 @@ from repro.tune.workloads import (BUILTIN_KERNELS, WORKLOADS, Workload,
 
 __all__ = [
     "TuneCache", "cache_key", "default_cache",
-    "CostEstimate", "evaluate", "objective_value",
+    "CostEstimate", "constrain_latency", "evaluate", "meets_latency",
+    "objective_value", "parse_objective",
     "Evaluated", "TuneResult", "exhaustive_search", "local_search",
     "measure_candidates", "select_block", "select_operating_point",
     "successive_halving", "tune",

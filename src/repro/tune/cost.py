@@ -62,8 +62,22 @@ from repro.perf.memo import register_cache as _register_cache
 from repro.tune.space import Candidate
 from repro.tune.workloads import Workload, get_workload
 
-#: Objectives the searches can minimize.
+#: Base objectives the searches can minimize.
 OBJECTIVES = ("cycles", "time", "energy", "edp")
+
+#: Latency-bound suffix units (longest-match first so "us"/"ns" win
+#: over the bare-seconds suffix).
+_LATENCY_UNITS = (("ns", 1.0), ("us", 1e3), ("ms", 1e6), ("s", 1e9))
+
+#: Rank scale for candidates violating a latency bound: any violator
+#: sorts after every bound-meeting candidate, and violators rank among
+#: themselves by how fast they are (closest-to-the-bound first), so a
+#: search over an infeasible space still returns the least-bad plan.
+#: Applied *multiplicatively* (``PENALTY * (1 + time_ns)``) — an additive
+#: offset this large would absorb any realistic ``time_ns`` into the same
+#: float64 value and collapse the within-tier ordering.  Finite (not
+#: ``inf``) so estimates stay JSON-clean.
+_LATENCY_PENALTY = 1e30
 
 
 @dataclass(frozen=True)
@@ -82,15 +96,77 @@ class CostEstimate:
         return self.energy_pj * self.time_ns
 
 
+@lru_cache(maxsize=256)
+def parse_objective(objective: str) -> tuple[str, float | None]:
+    """Split an objective string into ``(base, latency_bound_ns)``.
+
+    Grammar: ``<base>`` or ``<base>@time<=<bound><unit>`` where ``base``
+    is one of :data:`OBJECTIVES` and ``unit`` is ``ns``/``us``/``ms``/
+    ``s`` (bare numbers are nanoseconds).  ``"energy@time<=2.5ms"`` is
+    the serving question — *minimum energy among the plans finishing
+    within 2.5 ms* — with the bound a hard constraint, not a weight:
+    bound-meeting candidates always outrank violators, and violators
+    rank by speed so an over-constrained search degrades to the fastest
+    plan (the cluster must miss the SLO as narrowly as it can).
+    """
+    base, sep, bound = objective.partition("@")
+    if base not in OBJECTIVES:
+        raise ValueError(f"unknown objective {base!r}; expected one of "
+                         f"{OBJECTIVES}, optionally with a latency bound "
+                         f"('energy@time<=2.5ms')")
+    if not sep:
+        return base, None
+    if not bound.startswith("time<="):
+        raise ValueError(
+            f"bad latency bound {bound!r} in objective {objective!r}; "
+            f"expected 'time<=<number><ns|us|ms|s>' "
+            f"(e.g. 'energy@time<=2.5ms')")
+    spec = bound[len("time<="):]
+    scale = 1.0
+    for unit, s in _LATENCY_UNITS:
+        if spec.endswith(unit):
+            spec, scale = spec[:-len(unit)], s
+            break
+    try:
+        bound_ns = float(spec) * scale
+    except ValueError:
+        raise ValueError(
+            f"bad latency bound number {spec!r} in objective "
+            f"{objective!r}; expected 'time<=<number><ns|us|ms|s>'") \
+            from None
+    if not bound_ns > 0:
+        raise ValueError(f"latency bound must be positive, got {bound_ns} "
+                         f"ns in objective {objective!r}")
+    return base, bound_ns
+
+
+def constrain_latency(base: str, bound_ns: float) -> str:
+    """The objective string for *minimum ``base`` within ``bound_ns``*
+    (``repr`` round-trips the float exactly, so equal bounds always
+    produce equal cache keys)."""
+    objective = f"{base}@time<={bound_ns!r}ns"
+    parse_objective(objective)   # validate eagerly, error names the input
+    return objective
+
+
 def objective_value(est: CostEstimate, objective: str) -> float:
     """Scalar to minimize.  ``cycles`` and ``time`` differ only when the
-    space sweeps operating points (cycles are frequency-independent)."""
-    try:
-        return {"cycles": est.cycles, "time": est.time_ns,
-                "energy": est.energy_pj, "edp": est.edp}[objective]
-    except KeyError:
-        raise ValueError(f"unknown objective {objective!r}; "
-                         f"expected one of {OBJECTIVES}") from None
+    space sweeps operating points (cycles are frequency-independent).
+    A latency-bounded objective (``"energy@time<=2.5ms"``) returns the
+    base metric for bound-meeting estimates and a penalty tier ordered
+    by ``time_ns`` for violators — see :func:`parse_objective`."""
+    base, bound_ns = parse_objective(objective)
+    if bound_ns is not None and est.time_ns > bound_ns:
+        return _LATENCY_PENALTY * (1.0 + est.time_ns)
+    return {"cycles": est.cycles, "time": est.time_ns,
+            "energy": est.energy_pj, "edp": est.edp}[base]
+
+
+def meets_latency(est: CostEstimate, objective: str) -> bool:
+    """Whether the estimate satisfies the objective's latency bound
+    (vacuously true for unbounded objectives)."""
+    bound_ns = parse_objective(objective)[1]
+    return bound_ns is None or est.time_ns <= bound_ns
 
 
 def tuned_schedule(workload: Workload, cand: Candidate) -> CopiftSchedule:

@@ -36,7 +36,8 @@ from repro.obs import metrics as _obs_metrics
 from repro.obs.spans import span as _obs_span
 from repro.tune import cache as _cache
 from repro.tune.cost import (OBJECTIVES, CostEstimate, evaluate,
-                             evaluate_batch, objective_value)
+                             evaluate_batch, objective_value,
+                             parse_objective)
 from repro.tune.space import Candidate, SearchSpace, default_space
 from repro.tune.workloads import Workload, get_workload
 
@@ -275,9 +276,9 @@ def tune(workload: Workload | str, problem: int | None = None,
     w = get_workload(workload) if isinstance(workload, str) else workload
     space = space or default_space(w, cfg, cluster=cluster)
     problem = problem or w.default_problem
-    if objective not in OBJECTIVES:
-        raise ValueError(f"unknown objective {objective!r}; "
-                         f"expected one of {OBJECTIVES}")
+    # Validates both plain objectives and the latency-bounded grammar
+    # ("energy@time<=2.5ms") — the error names the offending token.
+    parse_objective(objective)
 
     store = None if cache is False else (
         _cache.default_cache() if cache in (None, True) else cache)
