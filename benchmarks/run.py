@@ -16,6 +16,9 @@ Prints ``name,value,derived`` CSV lines:
                      policies (static / reactive / mpc) racing a p99 SLO
                      on a bursty trace, with the acceptance inequality
                      (mpc meets the SLO static misses, at <= energy)
+  * system.*       — manycore scaling (repro.system): cycles/energy/IPC
+                     vs cluster count per kernel — near-linear while
+                     compute-bound, flat once the shared HBM saturates
   * roofline.*     — TPU v5e roofline terms from the dry-run artifacts
                      (skipped with a notice until launch/dryrun.py has run)
 
@@ -48,8 +51,8 @@ import traceback
 
 def _sections() -> list[tuple[str, object]]:
     from benchmarks import (cluster_sweep, fig2, fig3, kernels_bench,
-                            obs_bench, perf_bench, serve_bench, table1,
-                            tune_bench)
+                            obs_bench, perf_bench, serve_bench,
+                            system_bench, table1, tune_bench)
     sections = [
         ("table1", table1.run),
         ("fig2", fig2.run),
@@ -60,6 +63,7 @@ def _sections() -> list[tuple[str, object]]:
         ("perf", perf_bench.run),
         ("obs", obs_bench.run),
         ("serve", serve_bench.run),
+        ("system", system_bench.run),
     ]
     try:
         from benchmarks import roofline
@@ -72,7 +76,15 @@ def _sections() -> list[tuple[str, object]]:
 def _structured(name: str):
     """Optional machine-readable payload for the JSON snapshot.  Sections
     are memoized upstream (tune cache, cluster lru_cache), so re-deriving
-    the structured view after the CSV pass costs little."""
+    the structured view after the CSV pass costs little.
+
+    A name outside the section registry is a caller bug (a typo'd section
+    would otherwise silently snapshot ``data: null``), so it raises with
+    the known names rather than returning ``None``."""
+    known = sorted(n for n, _ in _sections())
+    if name not in known:
+        raise ValueError(f"unknown section {name!r}; known sections: "
+                         f"{', '.join(known)}")
     if name == "tune":
         from benchmarks import tune_bench
         return tune_bench.generate()
@@ -89,6 +101,9 @@ def _structured(name: str):
     if name == "serve":
         from benchmarks import serve_bench
         return serve_bench.structured()
+    if name == "system":
+        from benchmarks import system_bench
+        return system_bench.structured()
     return None
 
 

@@ -1,0 +1,199 @@
+"""Benchmark: manycore scaling — clusters x interconnect x HBM
+(``repro.system`` priced through the one ``api.evaluate`` path).
+
+Three curves per run, all strong scaling (fixed total work split over
+1..16 clusters of the 8-core Snitch template):
+
+* **compute** — unconstrained HBM.  ``poly_lcg`` moves no bytes at all
+  and ``expf``'s streams hide under the private DMA width, so cycles
+  must drop near-linearly with the cluster count (the part keeps paying
+  for clusters, so anything less is a model bug).
+* **saturated** — the same ``expf`` sweep behind a narrow shared HBM
+  (16 B/cycle).  The NoC water-fills the bandwidth across active
+  clusters, so past the roofline knee every added cluster just re-slices
+  the same transfer floor: the curve must go *flat*, not keep scaling.
+* **hbm** — ``expf`` at a fixed cluster count across widening HBM
+  (8..32 B/cycle, then unconstrained): the curve descends out of the
+  transfer-bound regime into the compute floor, and more bandwidth must
+  never cost cycles (fair shares are monotone in the budget).
+
+The acceptance inequalities ``main`` gates with exit 1: cycles monotone
+non-increasing in cluster count on every curve, compute-bound efficiency
+>= 0.9 at the largest count, the saturated curve flat across its last
+step AND strictly above the unconstrained one there (the roofline
+actually bit), and the HBM sweep monotone.
+
+CLI:
+    PYTHONPATH=src python benchmarks/system_bench.py            # full
+    PYTHONPATH=src python benchmarks/system_bench.py --smoke    # CI smoke
+    PYTHONPATH=src python benchmarks/system_bench.py --json -
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+COUNTS = (1, 2, 4, 8, 16)
+TOTAL_BLOCKS = 256          # divisible by every count x 8 cores
+SMOKE_TOTAL_BLOCKS = 128
+SATURATED_HBM = 16.0        # B/cycle shared — well under one cluster's DMA
+HBM_SWEEP = (8.0, 12.0, 16.0, 32.0, None)
+HBM_SWEEP_CLUSTERS = 8
+COMPUTE_KERNELS = ("poly_lcg", "expf")
+STREAM_KERNEL = "expf"      # the byte-moving kernel the HBM curves use
+MIN_COMPUTE_EFF = 0.9
+FLAT_TOL = 0.01             # saturated last step: within 1% = flat
+
+_LAST_DOC: dict | None = None
+
+
+def _row(rep, n_clusters: int, hbm) -> dict:
+    energy_nj = rep.power_copift_mw * rep.time_us  # mW x us = nJ
+    return dict(
+        n_clusters=n_clusters,
+        hbm_bytes_per_cycle=hbm,
+        cycles=rep.cycles_copift,
+        time_us=rep.time_us,
+        power_mw=rep.power_copift_mw,
+        energy_nj=energy_nj,
+        ipc=rep.ipc_copift,
+        dma_bound=rep.dma_bound,
+        imbalance=rep.imbalance)
+
+
+def _scaling_efficiency(rows: list[dict]) -> list[float]:
+    base = rows[0]
+    return [(base["cycles"] / r["cycles"])
+            / (r["n_clusters"] / base["n_clusters"]) for r in rows]
+
+
+def generate(smoke: bool = False, seed: int = 0) -> dict:
+    """Price every curve through ``api.evaluate`` on ``Target.system``.
+
+    ``seed`` is accepted for CLI symmetry with the other benchmarks; the
+    model is deterministic, so it does not enter the numbers.
+    """
+    global _LAST_DOC
+    from repro import api
+
+    total_blocks = SMOKE_TOTAL_BLOCKS if smoke else TOTAL_BLOCKS
+
+    def price(name, k, hbm):
+        return api.evaluate(name, api.Target.system(
+            k, hbm_bytes_per_cycle=hbm), total_blocks=total_blocks)
+
+    curves: dict[str, list[dict]] = {}
+    for name in COMPUTE_KERNELS:
+        curves[f"compute.{name}"] = [
+            _row(price(name, k, None), k, None) for k in COUNTS]
+    curves[f"saturated.{STREAM_KERNEL}"] = [
+        _row(price(STREAM_KERNEL, k, SATURATED_HBM), k, SATURATED_HBM)
+        for k in COUNTS]
+    curves[f"hbm.{STREAM_KERNEL}"] = [
+        _row(price(STREAM_KERNEL, HBM_SWEEP_CLUSTERS, hbm),
+             HBM_SWEEP_CLUSTERS, hbm)
+        for hbm in HBM_SWEEP]
+
+    effs = {name: _scaling_efficiency(rows)
+            for name, rows in curves.items() if name.startswith("compute.")}
+
+    sat = curves[f"saturated.{STREAM_KERNEL}"]
+    free = curves[f"compute.{STREAM_KERNEL}"]
+    hbm_rows = curves[f"hbm.{STREAM_KERNEL}"]
+    cluster_curves = [rows for cname, rows in curves.items()
+                      if not cname.startswith("hbm.")]
+    acceptance = dict(
+        cycles_monotone_in_clusters=all(
+            b["cycles"] <= a["cycles"]
+            for rows in cluster_curves
+            for a, b in zip(rows, rows[1:])),
+        compute_bound_near_linear=all(
+            eff[-1] >= MIN_COMPUTE_EFF for eff in effs.values()),
+        saturated_flatline=(
+            sat[-1]["cycles"] >= sat[-2]["cycles"] * (1.0 - FLAT_TOL)),
+        roofline_bites=sat[-1]["cycles"] > free[-1]["cycles"],
+        hbm_monotone=all(b["cycles"] <= a["cycles"]
+                         for a, b in zip(hbm_rows, hbm_rows[1:])))
+    acceptance["ok"] = all(acceptance.values())
+
+    doc = dict(
+        scenario=dict(counts=list(COUNTS), total_blocks=total_blocks,
+                      saturated_hbm=SATURATED_HBM,
+                      hbm_sweep=list(HBM_SWEEP),
+                      hbm_sweep_clusters=HBM_SWEEP_CLUSTERS),
+        curves=curves,
+        scaling_efficiency=effs,
+        acceptance=acceptance)
+    _LAST_DOC = doc
+    return doc
+
+
+def structured() -> dict:
+    """The last generated report (for ``run.py --json``), or a smoke run."""
+    return _LAST_DOC if _LAST_DOC is not None else generate(smoke=True)
+
+
+def format_lines(doc: dict) -> list[str]:
+    sc = doc["scenario"]
+    lines = ["system.scenario,total_blocks,saturated_hbm,"
+             "hbm_sweep_clusters",
+             f"system.scenario,{sc['total_blocks']},"
+             f"{sc['saturated_hbm']:.0f},{sc['hbm_sweep_clusters']}",
+             "system.curve,n_clusters,hbm,cycles,time_us,power_mw,"
+             "energy_nj,ipc,dma_bound"]
+    for cname, rows in doc["curves"].items():
+        for r in rows:
+            hbm = r["hbm_bytes_per_cycle"]
+            lines.append(
+                f"system.{cname},{r['n_clusters']},"
+                f"{'inf' if hbm is None else f'{hbm:.0f}'},{r['cycles']},"
+                f"{r['time_us']:.3f},{r['power_mw']:.1f},"
+                f"{r['energy_nj']:.1f},{r['ipc']:.3f},"
+                f"{int(r['dma_bound'])}")
+    for cname, eff in doc["scaling_efficiency"].items():
+        lines.append(f"system.eff.{cname},"
+                     + ",".join(f"{e:.3f}" for e in eff))
+    a = doc["acceptance"]
+    keys = [k for k in a if k != "ok"]
+    lines.append("system.acceptance," + ",".join(keys) + ",ok")
+    lines.append("system.acceptance,"
+                 + ",".join(str(int(a[k])) for k in keys)
+                 + f",{int(a['ok'])}")
+    return lines
+
+
+def run() -> list[str]:
+    """CSV section for ``benchmarks/run.py`` (smoke-sized)."""
+    return format_lines(generate(smoke=True))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: half the total work, same inequalities")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write the structured report as JSON "
+                         "('-' for stdout)")
+    args = ap.parse_args(argv)
+    doc = generate(smoke=args.smoke)
+    for line in format_lines(doc):
+        print(line)
+    if args.json:
+        if args.json == "-":
+            json.dump(doc, sys.stdout, indent=1)
+            print()
+        else:
+            with open(args.json, "w") as f:
+                json.dump(doc, f, indent=1)
+            print(f"wrote {args.json}")
+    if not doc["acceptance"]["ok"]:
+        bad = [k for k, v in doc["acceptance"].items()
+               if k != "ok" and not v]
+        print(f"system.fail,acceptance violated: {','.join(bad)}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,9 @@
 
 The paper's pipeline — COPIFT plan → dual-issue timing → cluster/DVFS
 evaluation → autotuning → serving — used to be reachable only through
-parallel subsystem entry points (``evaluate_cluster`` vs
-``evaluate_cluster_het``, three tuner front doors, string-keyed kernels,
-ad-hoc engine kwargs).  This package is the composable surface over all of
-it, built from three objects:
+parallel subsystem entry points (per-layer evaluate functions, three tuner
+front doors, string-keyed kernels, ad-hoc engine kwargs).  This package is
+the composable surface over all of it, built from three objects:
 
 * :class:`KernelSpec` — *what* runs: one registry object per kernel
   binding its ISA schedule, tunable workload, jit'd entry point and
@@ -14,18 +13,21 @@ it, built from three objects:
 * :class:`Target`     — *where* it runs: cluster shape x DVFS point(s) x
   scheduling strategy x power cap.  Heterogeneous DVFS islands are the
   general case; a homogeneous cluster is a 1-island target and a single
-  PE the 1-core cluster, exactly as Snitch treats a lone core.
+  PE the 1-core cluster, exactly as Snitch treats a lone core.  One level
+  up, ``Target.system(...)`` attaches a :class:`SystemConfig` — N
+  clusters behind an interconnect + shared HBM (``repro.system``) — and
+  the lone cluster is *its* 1-cluster degenerate case.
 * :class:`Report`     — *what happened*: the one result dataclass
   :func:`evaluate` returns, with every derived metric defined once.
 
 Plus the verbs: :func:`evaluate` (the one cluster-evaluation code path),
 :func:`sweep` (many targets in one batched pass — same numbers, shared
-timings), :class:`Tuner` (plan/block/operating-point searches sharing one
-cache and one batched cost oracle), and :func:`config` (scoped
-kernel-runtime overrides).  The pre-facade entry points survive as thin
-deprecation shims; see README's migration table.  The memo/batch tier
-underneath all of it is ``repro.perf`` (disable with
-``REPRO_TIMING_MEMO=0``).
+timings), :class:`Tuner` (plan/block/operating-point/cluster-count searches
+sharing one cache and one batched cost oracle), and :func:`config`
+(scoped kernel-runtime overrides).  The pre-facade shims were removed
+after PR 8 — README's migration table maps the historical names onto
+these entry points.  The memo/batch tier underneath all of it is
+``repro.perf`` (disable with ``REPRO_TIMING_MEMO=0``).
 """
 
 from repro.api.evaluate import compare_strategies, evaluate, headline, sweep
@@ -36,11 +38,13 @@ from repro.api.runtime import config
 from repro.api.target import Target
 from repro.api.tuner import Tuner
 
-# Re-exported building blocks: the static cluster vocabulary a Target is
-# built from, so facade consumers don't need to reach into repro.cluster.
+# Re-exported building blocks: the static cluster/system vocabulary a
+# Target is built from, so facade consumers don't need to reach into
+# repro.cluster / repro.system.
 from repro.cluster.topology import (NOMINAL_POINT, OPERATING_POINTS,
                                     SNITCH_CLUSTER, ClusterConfig, DvfsIsland,
                                     OperatingPoint, parse_islands)
+from repro.system.topology import SystemConfig, parse_system
 
 _DEFAULT_TUNER: "Tuner | None" = None
 
@@ -63,4 +67,5 @@ __all__ = [
     "Tuner", "default_tuner", "config",
     "NOMINAL_POINT", "OPERATING_POINTS", "SNITCH_CLUSTER", "ClusterConfig",
     "DvfsIsland", "OperatingPoint", "parse_islands",
+    "SystemConfig", "parse_system",
 ]

@@ -11,9 +11,11 @@ reduce to the paper-calibrated single-PE numbers at one core (the
 invariant chain pinned by ``tests/test_cluster.py`` →
 ``tests/test_het_cluster.py`` → ``tests/test_api.py``).
 
-The deprecated ``repro.cluster.evaluate_cluster`` /
-``evaluate_cluster_het`` shims both delegate here — they are one code
-path by construction, not by parallel maintenance.
+``repro.system.evaluate_system`` composes this same path one level up:
+each cluster of a ``SystemConfig`` is priced by :func:`_price_cluster`
+(the exact per-cluster body of :func:`evaluate`), so the manycore model
+and the single-cluster model are one code path by construction, not by
+parallel maintenance — a 1-cluster system is bit-for-bit this function.
 
 Like the single-PE model, this is a steady-state view: fill/drain and the
 end-of-kernel barrier are excluded (they vanish against any production
@@ -22,6 +24,7 @@ problem size, cf. Fig. 3's convergence).
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import lru_cache
 
 import numpy as np
@@ -101,6 +104,59 @@ def _compute_cycles(timing_fn, extras: tuple[float, ...],
     return latest, instrs
 
 
+@dataclass(frozen=True)
+class _ClusterPass:
+    """Everything one cluster contributes to a report: the assignment plus
+    the compute/instr/power figures of the registry-default plan path.
+    ``evaluate`` consumes one of these; ``system.evaluate_system`` reduces
+    over several — same numbers either way."""
+    assignment: object
+    active: tuple
+    act_speeds: tuple
+    act_blocks: tuple
+    act_points: tuple
+    extras_c: tuple
+    extras_b: tuple
+    compute_c: "int | float"
+    compute_b: "int | float"
+    instrs_c: int
+    instrs_b: int
+    power_b: float
+    power_c: float
+
+
+def _price_cluster(cfg, name: str, core_points, block: int,
+                   total_blocks: int, strategy: str,
+                   f_ref: float) -> _ClusterPass:
+    """Price ``total_blocks`` blocks of ``name`` on one cluster — the exact
+    per-cluster body of :func:`evaluate`'s default-plan path, factored out
+    so the system layer reduces over the *same expression tree* (the
+    bit-for-bit 1-cluster invariant).  ``f_ref`` is the caller's reference
+    clock: the cluster's own fastest core for a lone cluster, the
+    system-wide fastest for a manycore part."""
+    speeds = tuple(p.freq_ghz for p in core_points)
+    assignment = assign(total_blocks, speeds, strategy)
+    active = tuple(i for i, b in enumerate(assignment.blocks_per_core) if b)
+    act_speeds = tuple(speeds[i] for i in active)
+    act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
+    act_points = tuple(core_points[i] for i in active)
+    extras_c = copift_extra_contention_het(cfg, name, act_speeds)
+    extras_b = baseline_extra_contention_het(cfg, name, act_speeds)
+    compute_c, instrs_c = _compute_cycles(
+        lambda e: _copift_timing(name, block, e), extras_c, act_blocks,
+        act_speeds, f_ref)
+    compute_b, instrs_b = _compute_cycles(
+        lambda e: _baseline_timing(name, block, e), extras_b, act_blocks,
+        act_speeds, f_ref)
+    power_b, power_c = _cluster_powers(cfg, name, act_points)
+    return _ClusterPass(assignment=assignment, active=active,
+                        act_speeds=act_speeds, act_blocks=act_blocks,
+                        act_points=act_points, extras_c=extras_c,
+                        extras_b=extras_b, compute_c=compute_c,
+                        compute_b=compute_b, instrs_c=instrs_c,
+                        instrs_b=instrs_b, power_b=power_b, power_c=power_c)
+
+
 def _resolve_plan(spec, plan):
     """Canonicalize a tuner candidate for the cluster path.
 
@@ -161,6 +217,12 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
             f"is tuner-only; evaluate() needs one of "
             f"{[s.name for s in _simulatable()]}")
     target = target or Target()
+    if target.system_config is not None:
+        # Manycore part: the system layer reduces _price_cluster over the
+        # clusters (lazy import — repro.system imports api internals).
+        from repro.system.analytics import evaluate_system
+        return evaluate_system(spec, target, blocks_per_core=blocks_per_core,
+                               total_blocks=total_blocks, plan=plan)
     name = spec.isa_name
     cfg = target.cluster
 
@@ -182,17 +244,22 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
                          f"{total_blocks} (blocks_per_core={blocks_per_core})")
     with _obs_span("api.evaluate", kernel=name, n_cores=cfg.n_cores,
                    total_blocks=total_blocks, strategy=target.strategy):
-        assignment = assign(total_blocks, speeds, target.strategy)
-
-        active = tuple(i for i, b in enumerate(assignment.blocks_per_core)
-                       if b)
-        act_speeds = tuple(speeds[i] for i in active)
-        act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
-        act_points = tuple(core_points[i] for i in active)
         if plan is None:
-            extras_c = copift_extra_contention_het(cfg, name, act_speeds)
-            copift_fn = lambda e: _copift_timing(name, block, e)  # noqa: E731
+            cp = _price_cluster(cfg, name, core_points, block, total_blocks,
+                                target.strategy, f_ref)
+            assignment, active = cp.assignment, cp.active
+            act_speeds, act_blocks = cp.act_speeds, cp.act_blocks
+            extras_c, extras_b = cp.extras_c, cp.extras_b
+            compute_c, instrs_c = cp.compute_c, cp.instrs_c
+            compute_b, instrs_b = cp.compute_b, cp.instrs_b
+            power_b, power_c = cp.power_b, cp.power_c
         else:
+            assignment = assign(total_blocks, speeds, target.strategy)
+            active = tuple(i for i, b
+                           in enumerate(assignment.blocks_per_core) if b)
+            act_speeds = tuple(speeds[i] for i in active)
+            act_blocks = tuple(assignment.blocks_per_core[i] for i in active)
+            act_points = tuple(core_points[i] for i in active)
             extras_c = tuple(
                 plan_profile.extra_stalls_het(cfg, act_speeds, pos)
                 for pos in range(len(act_speeds)))
@@ -200,25 +267,21 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
                       else copift_serial_block_timing)
             copift_fn = lambda e: timing(  # noqa: E731
                 plan_sched, block, extra_contention=e)
-        extras_b = baseline_extra_contention_het(cfg, name, act_speeds)
-
-        compute_c, instrs_c = _compute_cycles(copift_fn, extras_c,
-                                              act_blocks, act_speeds, f_ref)
-        compute_b, instrs_b = _compute_cycles(
-            lambda e: _baseline_timing(name, block, e), extras_b,
-            act_blocks, act_speeds, f_ref)
+            extras_b = baseline_extra_contention_het(cfg, name, act_speeds)
+            compute_c, instrs_c = _compute_cycles(
+                copift_fn, extras_c, act_blocks, act_speeds, f_ref)
+            compute_b, instrs_b = _compute_cycles(
+                lambda e: _baseline_timing(name, block, e), extras_b,
+                act_blocks, act_speeds, f_ref)
+            power_b = het_cluster_power_mw(cfg, name, act_points,
+                                           copift=False)
+            power_c = _plan_cluster_power(cfg, spec, plan_sched, block,
+                                          act_points)
         total_elems = block * total_blocks
         transfer = transfer_cycles(cfg, kernel_bytes(name, total_elems))
         cycles_c = max(compute_c, transfer)
         cycles_b = max(compute_b, transfer)
         uniform = len(set(speeds)) == 1
-        if plan is None:
-            power_b, power_c = _cluster_powers(cfg, name, act_points)
-        else:
-            power_b = het_cluster_power_mw(cfg, name, act_points,
-                                           copift=False)
-            power_c = _plan_cluster_power(cfg, spec, plan_sched, block,
-                                          act_points)
 
         rec = _obs_record.active_recorder()
         if rec is not None:

@@ -1,10 +1,9 @@
 """Scoped runtime configuration — ``repro.api.config``.
 
 The kernels' impl dispatch (``auto``/``pallas``/``reference``) and the
-tuned-tiling defaults used to be module-level mutable globals toggled by
-``set_default_impl``/``enable_tuned_defaults`` — process-wide state that
-concurrent benchmarks could race and that leaked across test boundaries.
-``config`` is the replacement: a context manager over ContextVars, so the
+tuned-tiling defaults used to be module-level mutable globals — process-wide
+state that concurrent benchmarks could race and that leaked across test
+boundaries.  ``config`` is a context manager over ContextVars, so the
 override is visible exactly within the ``with`` block (and within the
 current thread/task — a parallel benchmark keeps its own view):
 

@@ -2,12 +2,13 @@
 
 Pre-facade, the execution context was scattered across call signatures:
 ``ClusterConfig`` + a separate ``n_cores`` argument + an ``OperatingPoint``
-+ an island layout + a scheduling strategy + a power cap, with
-``evaluate_cluster`` and ``evaluate_cluster_het`` each taking a different
-subset.  A ``Target`` bundles all of it, and makes the heterogeneous
-(DVFS-island) cluster the general case: a homogeneous cluster is literally
-a one-island target, and a single PE is the 1-core cluster — exactly how
-Snitch (Zaruba et al., 2020) treats a lone core as the degenerate cluster.
++ an island layout + a scheduling strategy + a power cap.  A ``Target``
+bundles all of it, and makes the heterogeneous (DVFS-island) cluster the
+general case: a homogeneous cluster is literally a one-island target, and
+a single PE is the 1-core cluster — exactly how Snitch (Zaruba et al.,
+2020) treats a lone core as the degenerate cluster.  One level further up,
+:meth:`Target.system` attaches a :class:`~repro.system.SystemConfig` —
+the manycore part — and the lone cluster becomes *its* degenerate case.
 """
 
 from __future__ import annotations
@@ -18,6 +19,7 @@ from repro.cluster.scheduler import STRATEGIES
 from repro.cluster.topology import (NOMINAL_POINT, SNITCH_CLUSTER,
                                     ClusterConfig, DvfsIsland, OperatingPoint,
                                     parse_islands)
+from repro.system.topology import SystemConfig, parse_system
 
 
 @dataclass(frozen=True)
@@ -32,12 +34,18 @@ class Target:
                       (``cluster.scheduler.assign``; on uniform cores every
                       strategy reduces exactly to block-cyclic);
     ``power_cap_mw``  cluster-level power budget, honored by the tuner and
-                      reported as feasibility by the cost oracle.
+                      reported as feasibility by the cost oracle (a
+                      *system*-level budget when ``system_config`` is set);
+    ``system_config`` a :class:`~repro.system.SystemConfig` for manycore
+                      targets (``None`` = a single cluster; built by
+                      :meth:`Target.system`) — ``api.evaluate`` then routes
+                      through ``repro.system.evaluate_system``.
     """
     cluster: ClusterConfig = SNITCH_CLUSTER
     point: OperatingPoint = NOMINAL_POINT
     strategy: str = "block_cyclic"
     power_cap_mw: float | None = None
+    system_config: SystemConfig | None = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -46,6 +54,12 @@ class Target:
         if self.power_cap_mw is not None and self.power_cap_mw <= 0:
             raise ValueError(f"power_cap_mw must be positive, got "
                              f"{self.power_cap_mw}")
+        if self.system_config is not None \
+                and self.cluster is not self.system_config.clusters[0] \
+                and self.cluster != self.system_config.clusters[0]:
+            raise ValueError(
+                "Target.cluster must be the system's first cluster; "
+                "construct manycore targets with Target.system(...)")
 
     # -- constructors -------------------------------------------------------
 
@@ -79,16 +93,56 @@ class Target:
         return cls(cluster=cluster.with_islands(*islands), strategy=strategy,
                    power_cap_mw=power_cap_mw)
 
+    @classmethod
+    def system(cls, system: "SystemConfig | int | str",
+               point: OperatingPoint = NOMINAL_POINT,
+               strategy: str = "block_cyclic",
+               cluster: ClusterConfig = SNITCH_CLUSTER,
+               hbm_bytes_per_cycle: float | None = None,
+               noc_latency_cycles: int = 0,
+               cluster_strategy: str = "block_cyclic",
+               power_cap_mw: float | None = None) -> "Target":
+        """A manycore target: a :class:`~repro.system.SystemConfig`, a
+        cluster count (``Target.system(4)`` — four copies of ``cluster``),
+        or a spec string (``Target.system("4x8c,hbm=256")``).
+
+        ``strategy`` schedules blocks → cores inside each cluster;
+        ``cluster_strategy`` (or the config's own) schedules blocks →
+        clusters.  ``power_cap_mw`` is the *system* budget.  The HBM/NoC
+        keywords apply when building the config here; an explicit
+        ``SystemConfig`` carries its own."""
+        if isinstance(system, int):
+            system = SystemConfig.homogeneous(
+                system, cluster, hbm_bytes_per_cycle=hbm_bytes_per_cycle,
+                noc_latency_cycles=noc_latency_cycles,
+                cluster_strategy=cluster_strategy)
+        elif isinstance(system, str):
+            system = parse_system(system, cluster)
+        return cls(cluster=system.clusters[0], point=point,
+                   strategy=strategy, power_cap_mw=power_cap_mw,
+                   system_config=system)
+
     # -- derived views ------------------------------------------------------
 
     @property
     def n_cores(self) -> int:
+        """Total cores — across every cluster for a manycore target."""
+        if self.system_config is not None:
+            return self.system_config.n_cores
         return self.cluster.n_cores
+
+    @property
+    def n_clusters(self) -> int:
+        return 1 if self.system_config is None \
+            else self.system_config.n_clusters
 
     @property
     def core_points(self) -> tuple[OperatingPoint, ...]:
         """One operating point per core: the island layout expanded, or
-        ``point`` replicated when homogeneous."""
+        ``point`` replicated when homogeneous (flattened cluster-major on
+        a manycore target)."""
+        if self.system_config is not None:
+            return self.system_config.core_points(self.point)
         return self.cluster.core_points(self.point)
 
     @property

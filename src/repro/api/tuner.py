@@ -135,7 +135,8 @@ class Tuner:
                         heterogeneous: bool = False,
                         max_islands: int = 2,
                         per_island_blocks: bool = False,
-                        latency_ns: float | None = None) -> TuneResult:
+                        latency_ns: float | None = None,
+                        n_clusters: "int | tuple[int, ...] | None" = None):
         """Cluster operating-point selection under the target's power cap.
 
         ``heterogeneous=True`` searches DVFS-island layouts and weighted
@@ -148,10 +149,30 @@ class Tuner:
         to the priced problem's service time) — via the
         ``"energy@time<=..."`` objective grammar; with no point fast
         enough the selection degrades to the fastest feasible one.
+
+        ``n_clusters`` lifts the search one level: candidate *cluster
+        counts* (an int ``k`` searches ``1..k``; a tuple searches exactly
+        those) x the DVFS ladder, priced on the whole manycore part with
+        the target's ``power_cap_mw`` as the **system** budget — returns
+        a :class:`repro.system.SystemPoint` (its ``best_cost`` mirrors
+        ``TuneResult.best_cost``).  The target's ``system_config`` (if
+        any) supplies the cluster template and HBM/NoC parameters.
         """
         objective = objective or self.objective or "energy"
         if latency_ns is not None:
             objective = constrain_latency(objective, latency_ns)
+        if n_clusters is not None:
+            from repro.system.analytics import select_system_point
+            sys_cfg = self.target.system_config
+            return select_system_point(
+                spec if isinstance(spec, str) else self._workload(spec).name,
+                n_clusters, cluster=self.target.cluster,
+                hbm_bytes_per_cycle=(sys_cfg.hbm_bytes_per_cycle
+                                     if sys_cfg is not None else None),
+                noc_latency_cycles=(sys_cfg.noc_latency_cycles
+                                    if sys_cfg is not None else 0),
+                power_cap_mw=self.target.power_cap_mw,
+                objective=objective)
         w = self._workload(spec)
         with _obs_span("tuner.operating_point", workload=w.name,
                        heterogeneous=heterogeneous,

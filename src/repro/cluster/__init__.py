@@ -16,10 +16,9 @@ Layer map (mirrors ``repro.core``'s):
   and the energy-optimal-point search under a cluster power cap
 * ``report``      — the unified ``Report`` result object (public name
   ``repro.api.Report``) with every derived metric defined once
-* ``analytics``   — strong/weak scaling curves, cluster roofline,
-  fig2-style aggregates, and the deprecated ``evaluate_cluster`` /
-  ``evaluate_cluster_het`` shims over the single ``repro.api.evaluate``
-  code path (DVFS-island/big.LITTLE clusters are the general case there)
+* ``analytics``   — strong/weak scaling curves, cluster roofline and
+  fig2-style aggregates over the single ``repro.api.evaluate`` code path
+  (DVFS-island/big.LITTLE clusters are the general case there)
 
 Invariant (pinned in ``tests/test_cluster.py``): at one core, nominal DVFS
 and zero contention the cluster results equal the single-PE
@@ -31,8 +30,7 @@ path reproduce the homogeneous numbers bit-for-bit.
 
 from repro.cluster.analytics import (ClusterKernelResult, HetClusterResult,
                                      RooflinePoint, cluster_roofline,
-                                     compare_strategies, evaluate_cluster,
-                                     evaluate_cluster_het, headline,
+                                     compare_strategies, headline,
                                      scaling_efficiency, strong_scaling,
                                      weak_scaling)
 from repro.cluster.report import Report, ReportMetrics
@@ -56,8 +54,8 @@ from repro.cluster.topology import (NOMINAL_POINT, OPERATING_POINTS,
 __all__ = [
     "Report", "ReportMetrics",
     "ClusterKernelResult", "HetClusterResult", "RooflinePoint",
-    "cluster_roofline", "compare_strategies", "evaluate_cluster",
-    "evaluate_cluster_het", "headline", "scaling_efficiency",
+    "cluster_roofline", "compare_strategies", "headline",
+    "scaling_efficiency",
     "strong_scaling", "weak_scaling", "AccessProfile", "baseline_profile",
     "baseline_extra_contention", "baseline_extra_contention_het",
     "copift_extra_contention", "copift_extra_contention_het",

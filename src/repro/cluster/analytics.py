@@ -1,21 +1,18 @@
-"""Cluster-level evaluation — pre-facade entry points, now thin shims.
+"""Cluster-level analytics over the facade's one evaluation path.
 
 The composition itself (per-PE COPIFT x contention x DMA x DVFS) lives in
 ``repro.api.evaluate`` as ONE code path in which a homogeneous cluster is
 the degenerate (uniform-points) case of the heterogeneous one.  This
-module keeps the historical surface alive on top of it:
+module holds the derived curves on top of it:
 
-* ``evaluate_cluster`` / ``evaluate_cluster_het`` — deprecated shims that
-  build the equivalent :class:`repro.api.Target` and delegate; their
-  numbers stay bit-for-bit what ``tests/test_cluster.py`` /
-  ``tests/test_het_cluster.py`` pinned before the facade (a hard
-  requirement, re-asserted kernel-by-kernel in ``tests/test_api.py``).
-* ``ClusterKernelResult`` / ``HetClusterResult`` — deprecated aliases of
+* scaling curves (weak/strong/efficiency), the cluster roofline and the
+  ``headline`` aggregates — all delegating to the facade internally;
+* ``ClusterKernelResult`` / ``HetClusterResult`` — historical aliases of
   the unified :class:`repro.api.Report`; the metric properties the two
-  classes used to copy-paste are defined once on its
-  ``ReportMetrics`` mixin.
-* scaling curves, the cluster roofline and the ``headline`` aggregates —
-  still supported (not deprecated), delegating to the facade internally.
+  classes used to copy-paste are defined once on its ``ReportMetrics``
+  mixin.  (The pre-facade ``evaluate_cluster`` / ``evaluate_cluster_het``
+  shims were removed after PR 8 — call ``repro.api.evaluate`` with a
+  ``Target``; README's migration table maps the old signatures.)
 
 Like the single-PE model this is steady-state: fill/drain and the
 end-of-kernel barrier are excluded (they vanish against any production
@@ -24,7 +21,6 @@ problem size, cf. Fig. 3's convergence).
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, replace
 
 from repro.cluster.report import Report, headline  # noqa: F401  (re-export)
@@ -33,7 +29,7 @@ from repro.cluster.topology import (NOMINAL_POINT, SNITCH_CLUSTER,
                                     ClusterConfig, OperatingPoint)
 from repro.core.kernels_isa import KERNELS, copift_schedule
 
-#: Deprecated aliases: both historical result classes are the one Report.
+#: Historical aliases: both pre-facade result classes are the one Report.
 ClusterKernelResult = Report
 HetClusterResult = Report
 
@@ -57,40 +53,6 @@ def _homogeneous_target(cfg: ClusterConfig, n_cores: int | None,
     if n != cfg.n_cores or cfg.islands is not None:
         cfg = replace(cfg, n_cores=n, islands=None)
     return Target(cluster=cfg, point=point)
-
-
-def evaluate_cluster(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
-                     n_cores: int | None = None,
-                     point: OperatingPoint = NOMINAL_POINT,
-                     blocks_per_core: int = 1,
-                     total_blocks: int | None = None) -> Report:
-    """Deprecated: use ``repro.api.evaluate(name, Target.homogeneous(...))``.
-
-    Weak scaling by default (``blocks_per_core`` blocks per core); pass
-    ``total_blocks`` for strong scaling (fixed work, block-cyclic split).
-    """
-    warnings.warn("evaluate_cluster is deprecated; use repro.api.evaluate("
-                  "spec, Target.homogeneous(...))", DeprecationWarning,
-                  stacklevel=2)
-    ev, _ = _facade()
-    return ev(name, _homogeneous_target(cfg, n_cores, point),
-              blocks_per_core=blocks_per_core, total_blocks=total_blocks)
-
-
-def evaluate_cluster_het(name: str, cfg: ClusterConfig = SNITCH_CLUSTER,
-                         strategy: str = "lpt",
-                         point: OperatingPoint = NOMINAL_POINT,
-                         blocks_per_core: int = 1,
-                         total_blocks: int | None = None) -> Report:
-    """Deprecated: use ``repro.api.evaluate`` with a (heterogeneous)
-    ``Target`` — per-core operating points come from ``cfg.islands``, a
-    config without islands runs every core at ``point``."""
-    warnings.warn("evaluate_cluster_het is deprecated; use "
-                  "repro.api.evaluate(spec, Target(cluster=cfg, "
-                  "strategy=...))", DeprecationWarning, stacklevel=2)
-    ev, Target = _facade()
-    return ev(name, Target(cluster=cfg, point=point, strategy=strategy),
-              blocks_per_core=blocks_per_core, total_blocks=total_blocks)
 
 
 def compare_strategies(name: str, cfg: ClusterConfig,

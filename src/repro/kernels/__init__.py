@@ -8,11 +8,9 @@ execution on CPU; TPU is the compilation target).
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import (enable_tuned_defaults, exp, log, mc_pi,
-                               mc_poly, overrides, set_default_impl,
+from repro.kernels.ops import (exp, log, mc_pi, mc_poly, overrides,
                                set_impl, set_tuned_defaults, softmax,
                                uniform)
 
-__all__ = ["ops", "ref", "enable_tuned_defaults", "exp", "log", "mc_pi",
-           "mc_poly", "overrides", "set_default_impl", "set_impl",
-           "set_tuned_defaults", "softmax", "uniform"]
+__all__ = ["ops", "ref", "exp", "log", "mc_pi", "mc_poly", "overrides",
+           "set_impl", "set_tuned_defaults", "softmax", "uniform"]

@@ -22,7 +22,6 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import functools
-import warnings
 
 import numpy as np
 
@@ -123,26 +122,6 @@ def overrides(impl: str | None = None, tuned_defaults: bool | None = None):
             var.reset(token)
         if tuned_defaults is not None:
             _tuned_block_rows.cache_clear()
-
-
-def set_default_impl(impl: str) -> None:
-    """Deprecated shim: use ``repro.api.config(impl=...)`` (scoped) or
-    ``set_impl`` (persistent)."""
-    warnings.warn("set_default_impl is deprecated; use "
-                  "repro.api.config(impl=...) for a scoped override or "
-                  "repro.kernels.ops.set_impl for a persistent one",
-                  DeprecationWarning, stacklevel=2)
-    set_impl(impl)
-
-
-def enable_tuned_defaults(enable: bool = True) -> None:
-    """Deprecated shim: use ``repro.api.config(tuned_defaults=...)``
-    (scoped) or ``set_tuned_defaults`` (persistent)."""
-    warnings.warn("enable_tuned_defaults is deprecated; use "
-                  "repro.api.config(tuned_defaults=...) for a scoped "
-                  "override or repro.kernels.ops.set_tuned_defaults for a "
-                  "persistent one", DeprecationWarning, stacklevel=2)
-    set_tuned_defaults(enable)
 
 
 @functools.lru_cache(maxsize=None)

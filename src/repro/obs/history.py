@@ -67,6 +67,14 @@ DIRECTION_RULES: tuple = (
     ("*latency*", "higher_worse"),
     ("*dropped*", "higher_worse"),
     ("*slo_met*", "lower_worse"),
+    ("*shed*", "higher_worse"),
+    ("*slo_violations*", "higher_worse"),
+    # Manycore scaling figures (benchmarks/system_bench.py): scaling
+    # efficiency must not fall, and the saturated-HBM transfer floor
+    # must not rise.  ``*eff*`` sits before the generic catch-all so
+    # ``system.eff.compute.*`` rows read as quality metrics.
+    ("*eff*", "lower_worse"),
+    ("*saturated*", "higher_worse"),
     ("*energy*", "higher_worse"),
     ("*power*", "higher_worse"),
     ("*", "advisory"),

@@ -89,7 +89,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
                  batch: int = 4, temperature: float = 0.0, seed: int = 0,
                  autotune: bool = False, power_cap_mw: float | None = None,
-                 persist_tuned_defaults: bool = False):
+                 persist_tuned_defaults: bool = False, system=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -98,7 +98,9 @@ class ServeEngine:
         self.seed = seed
         self.autotune = autotune
         self.power_cap_mw = power_cap_mw
+        self.system = system
         self.operating_plan = None
+        self.system_plan = None
         self._prev_tuned: bool | None = None
         self._persist_tuned = persist_tuned_defaults
         self._closed = False
@@ -139,6 +141,18 @@ class ServeEngine:
                     name: tuner.operating_point(name, heterogeneous=True,
                                                 per_island_blocks=True)
                     for name in ("softmax", "prng")}
+                if system is not None:
+                    # Manycore deployment: also size the part — cluster
+                    # count x DVFS point under the same (system) power
+                    # cap, priced through repro.system.  ``system`` here
+                    # is a SystemConfig whose cluster count is the upper
+                    # bound of the search.
+                    sys_tuner = api.Tuner(api.Target.system(
+                        system, power_cap_mw=power_cap_mw))
+                    self.system_plan = {
+                        name: sys_tuner.operating_point(
+                            name, n_clusters=system.n_clusters)
+                        for name in ("softmax", "prng")}
             if _obs_metrics.enabled():
                 _obs_metrics.set_gauge("serve.autotune.wall_s",
                                        time.perf_counter() - t0)
@@ -152,6 +166,16 @@ class ServeEngine:
                         f"serve.plan.{name}.power_mw", c.power_mw)
                     _obs_metrics.set_gauge(
                         f"serve.plan.{name}.time_ns", c.time_ns)
+                if self.system_plan is not None:
+                    for name, res in self.system_plan.items():
+                        c = res.best_cost
+                        _obs_metrics.set_gauge(
+                            f"serve.plan.system.{name}.n_clusters",
+                            res.n_clusters)
+                        _obs_metrics.set_gauge(
+                            f"serve.plan.system.{name}.power_mw", c.power_mw)
+                        _obs_metrics.set_gauge(
+                            f"serve.plan.system.{name}.time_ns", c.time_ns)
         self._prefill = jax.jit(make_prefill(cfg))
         self._step = jax.jit(make_serve_step(cfg))
 

@@ -140,11 +140,35 @@ class ServicePricer:
     Every price is memoized; :meth:`price_many` additionally routes
     cold tuner-only batches through ``tune.cost.evaluate_batch`` so a
     policy pricing its whole plan grid pays one grouped pass.
+
+    ``system=`` prices slots on a manycore part
+    (:class:`~repro.system.SystemConfig`, uniform clusters): slots then
+    partition the *system's* cores, a slot spanning k whole clusters is
+    priced through ``Target.system`` with its proportional share of the
+    HBM bandwidth, and a sub-cluster slot falls back to the single-cluster
+    path (it never crosses a cluster boundary).  ``system=None`` is
+    bit-for-bit the historical single-cluster pricer.
     """
 
-    def __init__(self, cluster: ClusterConfig = SNITCH_CLUSTER):
+    def __init__(self, cluster: ClusterConfig = SNITCH_CLUSTER,
+                 system=None):
+        if system is not None:
+            if not system.is_uniform:
+                raise ValueError(
+                    "ServicePricer needs uniform clusters in the "
+                    "SystemConfig (slot partitioning assumes one cluster "
+                    "shape)")
+            cluster = system.clusters[0]
         self.cluster = cluster
+        self.system = system
         self._memo: dict[tuple, CostEstimate] = {}
+
+    @property
+    def n_cores(self) -> int:
+        """Cores the simulator's slot plans partition — across every
+        cluster for a system pricer."""
+        return self.system.n_cores if self.system is not None \
+            else self.cluster.n_cores
 
     def _spec(self, kern: str):
         from repro.api.registry import kernel as _registry_kernel
@@ -154,13 +178,31 @@ class ServicePricer:
             return None
         return spec if spec.simulatable else None
 
+    def _slot_target(self, n_cores: int, pt):
+        """The Target one slot prices on: k whole clusters (with their
+        proportional HBM share) on a system pricer, else a homogeneous
+        ``n_cores``-core cut of the cluster."""
+        from repro.api.target import Target
+        c = self.cluster.n_cores
+        if self.system is not None and n_cores >= c and n_cores % c == 0:
+            from repro.system.topology import SystemConfig
+            k = n_cores // c
+            hbm = self.system.hbm_bytes_per_cycle
+            if hbm is not None:
+                hbm = hbm * k / self.system.n_clusters
+            sub = SystemConfig.homogeneous(
+                k, self.cluster, hbm_bytes_per_cycle=hbm,
+                noc_latency_cycles=self.system.noc_latency_cycles,
+                cluster_strategy=self.system.cluster_strategy)
+            return Target.system(sub, point=pt)
+        return Target.homogeneous(n_cores=n_cores, point=pt,
+                                  cluster=self.cluster)
+
     def _price_evaluate(self, spec, elems: int, n_cores: int,
                         point: str) -> CostEstimate:
         from repro.api.evaluate import evaluate as _api_evaluate
-        from repro.api.target import Target
         pt = self.cluster.point(point)
-        target = Target.homogeneous(n_cores=n_cores, point=pt,
-                                    cluster=self.cluster)
+        target = self._slot_target(n_cores, pt)
         block = spec.get_workload().max_block
         rep = _api_evaluate(spec, target,
                             total_blocks=max(1, -(-elems // block)))
@@ -179,6 +221,24 @@ class ServicePricer:
             spec = self._spec(kern)
             if spec is not None:
                 est = self._price_evaluate(spec, elems, n_cores, point)
+            elif self.system is not None \
+                    and n_cores > self.cluster.n_cores:
+                # Tuner-only workload on a multi-cluster slot: ceil-share
+                # the problem across the k clusters, price one, compose
+                # (max of equal times; k x energy/power) — the same rule
+                # as repro.system.system_cost's tuner-only path.
+                w = get_workload(kern)
+                k = n_cores // self.cluster.n_cores
+                e0 = _cost_evaluate(
+                    w, Candidate(block=w.max_block,
+                                 n_cores=self.cluster.n_cores, point=point),
+                    problem=-(-elems // k), cfg=self.cluster)
+                est = CostEstimate(cycles=e0.cycles, time_ns=e0.time_ns,
+                                   energy_pj=e0.energy_pj * k,
+                                   ipc=e0.ipc * k,
+                                   power_mw=e0.power_mw * k,
+                                   feasible=e0.feasible,
+                                   dma_bound=e0.dma_bound)
             else:
                 w = get_workload(kern)
                 est = _cost_evaluate(
@@ -216,7 +276,7 @@ class ServicePricer:
         ``evaluate_batch`` (the policies' grid-pricing fast path)."""
         cold = [s for s in set(shapes)
                 if (kern, *s) not in self._memo]
-        if cold and self._spec(kern) is None:
+        if cold and self.system is None and self._spec(kern) is None:
             w = get_workload(kern)
             by_problem: dict[int, list[tuple[int, int, str]]] = {}
             for s in cold:
@@ -258,6 +318,7 @@ class SimReport:
     n_batches: int
     slo: SloSpec | None
     plan_switches: int        # control decisions that changed the plan
+    n_shed: int = 0           # rejected by SLO-aware admission (pre-queue)
     latencies_ms: tuple = field(repr=False, default=())
 
     def percentile(self, q: float) -> float:
@@ -265,14 +326,25 @@ class SimReport:
 
     @property
     def slo_met(self) -> bool:
-        """SLO holds iff the bound percentile is within budget AND the
-        admission queue dropped nothing (a dropped request is an
+        """SLO holds iff the bound percentile is within budget AND no
+        request was turned away (a dropped *or shed* request is an
         infinite-latency one)."""
         if self.slo is None:
             return True
-        if self.n_dropped or not self.n_completed:
+        if self.n_dropped or self.n_shed or not self.n_completed:
             return False
         return self.percentile(self.slo.percentile) <= self.slo.latency_ms
+
+    @property
+    def slo_violations(self) -> int:
+        """Requests that individually missed the SLO: dropped + shed +
+        completed past the latency bound — the apples-to-apples count for
+        comparing admission policies on one trace."""
+        if self.slo is None:
+            return self.n_dropped + self.n_shed
+        late = sum(1 for lat in self.latencies_ms
+                   if lat > self.slo.latency_ms)
+        return self.n_dropped + self.n_shed + late
 
     @property
     def energy_uj_per_request(self) -> float:
@@ -289,7 +361,8 @@ class SimReport:
             f"policy={self.policy}  trace={self.trace_spec!r} "
             f"seed={self.trace_seed}",
             f"  requests={self.n_requests} completed={self.n_completed} "
-            f"dropped={self.n_dropped}  batches={self.n_batches} "
+            f"dropped={self.n_dropped} shed={self.n_shed}  "
+            f"batches={self.n_batches} "
             f"(mean {self.mean_batch:.2f})  switches={self.plan_switches}",
             f"  latency {pct}  max={self.max_latency_ms:.3f}ms",
             f"  energy={self.energy_uj:.2f}uJ "
@@ -314,7 +387,8 @@ def _empty_report(trace, policy_name, slo) -> SimReport:
 def simulate(trace, policy, *, slo: SloSpec | None = None,
              epoch_ms: float = 50.0, queue_cap: int = 64,
              pricer: ServicePricer | None = None,
-             power_cap_mw: float | None = None) -> SimReport:
+             power_cap_mw: float | None = None,
+             admission: str = "tail_drop") -> SimReport:
     """Run ``policy`` over ``trace`` and return a :class:`SimReport`.
 
     ``epoch_ms`` is the control period (the policy re-decides its
@@ -323,16 +397,33 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
     counts as a miss.  ``power_cap_mw`` is handed to the policy (the
     planner must not pick a plan whose concurrent slot power exceeds it);
     the report's ``peak_power_mw`` shows what actually happened.
+
+    ``admission`` picks the gate in front of the queue:
+
+    * ``"tail_drop"`` (historical): admit until the queue is full;
+    * ``"slo_aware"``: additionally *shed* an arrival whose predicted
+      latency (queue depth in batch-waves x the current plan's batch
+      service time) already exceeds the SLO bound — turning work away
+      *before* it poisons the queue, so admitted requests keep meeting
+      the bound.  Requires ``slo``; shed requests are reported as
+      ``n_shed`` (they count as violations, like drops — the win is
+      *fewer* total ``slo_violations`` on an overloaded trace).
     """
     if epoch_ms <= 0:
         raise ValueError(f"epoch_ms must be positive, got {epoch_ms}")
     if queue_cap < 1:
         raise ValueError(f"queue_cap must be >= 1, got {queue_cap}")
+    if admission not in ("tail_drop", "slo_aware"):
+        raise ValueError(f"unknown admission policy {admission!r}; "
+                         f"expected 'tail_drop' or 'slo_aware'")
+    if admission == "slo_aware" and slo is None:
+        raise ValueError("admission='slo_aware' needs an SloSpec — the "
+                         "predicted-wait gate is the SLO's latency bound")
     pname = getattr(policy, "name", type(policy).__name__)
     if not trace.requests:
         return _empty_report(trace, pname, slo)
     pricer = pricer or ServicePricer()
-    n_cores = pricer.cluster.n_cores
+    n_cores = pricer.n_cores
     ctx = PolicyContext(pricer=pricer, kernel=trace.requests[0].kernel,
                         elems=trace.requests[0].elems, n_cores=n_cores,
                         epoch_ms=epoch_ms, slo=slo,
@@ -357,7 +448,7 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
     active_pj = 0.0
     idle_pj = 0.0
     peak_power = 0.0
-    n_dropped = n_batches = batch_sum = plan_switches = 0
+    n_dropped = n_shed = n_batches = batch_sum = plan_switches = 0
     arrived_epoch = completed_epoch = 0
     prev_rate = 0.0
     makespan = 0.0
@@ -367,6 +458,21 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
 
     def active_cores() -> int:
         return sum(c for _, _, c in busy.values())
+
+    def predicted_latency_ms(r) -> float:
+        """Deterministic service-time forecast for one arrival under the
+        current plan: immediate dispatch prices the lone request; a busy
+        system prices a full batch_max batch (one 'wave') and counts the
+        waves ahead of this request in the queue, plus its own."""
+        cps = plan.cores_per_slot(n_cores)
+        if not queue and len(busy) < plan.n_slots \
+                and active_cores() + cps <= n_cores:
+            return pricer.price(r.kernel, r.elems, cps,
+                                plan.point).time_ns * 1e-6
+        wave_ms = pricer.price(r.kernel, r.elems * plan.batch_max, cps,
+                               plan.point).time_ns * 1e-6
+        waves_ahead = 1 + len(queue) // (plan.n_slots * plan.batch_max)
+        return (waves_ahead + 1) * wave_ms
 
     def dispatch(t: float) -> None:
         nonlocal active_pj, peak_power, n_batches, batch_sum, seq, \
@@ -441,6 +547,11 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
                     n_dropped += 1
                     if metrics_on:
                         _obs_metrics.inc("serve.sim.dropped")
+                elif admission == "slo_aware" and plan is not None \
+                        and predicted_latency_ms(payload) > slo.latency_ms:
+                    n_shed += 1
+                    if metrics_on:
+                        _obs_metrics.inc("serve.sim.shed")
                 else:
                     queue.append(payload)
                     dispatch(t)
@@ -458,7 +569,7 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
         peak_power_mw=peak_power,
         mean_batch=batch_sum / n_batches if n_batches else 0.0,
         n_batches=n_batches, slo=slo, plan_switches=plan_switches,
-        latencies_ms=lat_sorted)
+        n_shed=n_shed, latencies_ms=lat_sorted)
     if metrics_on:
         _obs_metrics.inc("serve.sim.requests", trace.n_requests)
         _obs_metrics.set_gauge(f"serve.sim.{pname}.p99_ms",
@@ -469,4 +580,5 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
                                report.peak_power_mw)
         _obs_metrics.set_gauge(f"serve.sim.{pname}.dropped",
                                float(n_dropped))
+        _obs_metrics.set_gauge(f"serve.sim.{pname}.shed", float(n_shed))
     return report

@@ -1,15 +1,16 @@
 """Facade invariants (``repro.api``).
 
 THE contract: the facade's single ``evaluate`` code path reproduces the
-pre-facade numbers *bit-for-bit* — ``Target.single_pe()`` equals the
-paper-calibrated single-PE machinery, ``Target.homogeneous`` equals the
-deprecated ``evaluate_cluster`` for every kernel x strategy, and the
-heterogeneous path equals the deprecated ``evaluate_cluster_het``.  Plus:
-the deprecation shims actually warn, the registry resolves every
-historical name, ``config`` overrides are scoped and race-free, the
-``Tuner`` shares one cache across its methods, and per-island block
-tuning never scores worse than the shared-block plan under the same
-power cap.
+paper-calibrated numbers *bit-for-bit* — ``Target.single_pe()`` equals
+the single-PE machinery, every scheduling strategy collapses onto
+block-cyclic on uniform cores, and the historical result classes are
+aliases of the one ``Report``.  (The pre-facade shims were deleted after
+PR 8; their parity contracts live on as facade-internal invariants here
+and as the 1-cluster system reduction in ``tests/test_system_model.py``.)
+Plus: the registry resolves every historical name, ``config`` overrides
+are scoped and race-free, the ``Tuner`` shares one cache across its
+methods, and per-island block tuning never scores worse than the
+shared-block plan under the same power cap.
 """
 
 import threading
@@ -65,29 +66,24 @@ class TestSinglePeReduction:
         assert isinstance(r.cycles_base, int)
 
 
-class TestShimParity:
-    """api.evaluate reproduces the deprecated entry points bit-for-bit for
-    every kernel x strategy (the hard acceptance requirement)."""
+class TestFacadeParity:
+    """The one evaluate path is internally consistent bit-for-bit: on
+    uniform cores every weighted strategy collapses onto block-cyclic,
+    and the constructors that claim equivalence deliver it exactly."""
 
     @pytest.mark.parametrize("strategy", STRATEGIES)
     @pytest.mark.parametrize("name", KERNELS)
-    def test_homogeneous_matches_evaluate_cluster(self, name, strategy):
+    def test_uniform_cores_strategy_invariant(self, name, strategy):
         r = api.evaluate(
             name, api.Target.homogeneous(n_cores=8).with_strategy(strategy))
-        with pytest.deprecated_call():
-            from repro.cluster import evaluate_cluster
-            legacy = evaluate_cluster(name, api.SNITCH_CLUSTER, 8)
-        _assert_reports_identical(r, legacy)
+        base = api.evaluate(name, api.Target.homogeneous(n_cores=8))
+        _assert_reports_identical(r, base)
 
     @pytest.mark.parametrize("name", KERNELS)
-    def test_heterogeneous_matches_evaluate_cluster_het(self, name):
-        target = api.Target.heterogeneous("2@1.45GHz@1.00V,6@0.50GHz@0.60V")
-        r = api.evaluate(name, target, total_blocks=48)
-        with pytest.deprecated_call():
-            from repro.cluster import evaluate_cluster_het
-            legacy = evaluate_cluster_het(name, target.cluster, "lpt",
-                                          total_blocks=48)
-        _assert_reports_identical(r, legacy)
+    def test_single_pe_is_the_one_core_homogeneous_target(self, name):
+        r = api.evaluate(name, api.Target.single_pe())
+        base = api.evaluate(name, api.Target.homogeneous(n_cores=1))
+        _assert_reports_identical(r, base)
 
     def test_result_classes_are_report_aliases(self):
         from repro.cluster import ClusterKernelResult, HetClusterResult
@@ -104,29 +100,23 @@ class TestShimParity:
                                                         prop)
 
 
-class TestDeprecationShims:
-    def test_evaluate_cluster_warns(self):
-        from repro.cluster import evaluate_cluster
-        with pytest.deprecated_call(match="repro.api.evaluate"):
-            evaluate_cluster("expf", api.SNITCH_CLUSTER, 1)
+class TestShimsGone:
+    """The deprecation window closed: the pre-facade names no longer
+    exist anywhere (importing them is an error, not a warning)."""
 
-    def test_evaluate_cluster_het_warns(self):
-        from repro.cluster import evaluate_cluster_het
-        with pytest.deprecated_call(match="repro.api.evaluate"):
-            evaluate_cluster_het("expf", api.SNITCH_CLUSTER.with_cores(1))
+    def test_cluster_shims_removed(self):
+        import repro.cluster as cluster
+        for name in ("evaluate_cluster", "evaluate_cluster_het"):
+            assert not hasattr(cluster, name)
+            assert name not in cluster.__all__
 
-    def test_kernel_global_setters_warn_but_work(self):
+    def test_kernel_setter_shims_removed(self):
+        import repro.kernels as kernels
         from repro.kernels import ops as kops
-        try:
-            with pytest.deprecated_call(match="repro.api.config"):
-                kops.set_default_impl("reference")
-            assert kops.current_impl() == "reference"
-            with pytest.deprecated_call(match="repro.api.config"):
-                kops.enable_tuned_defaults(False)
-            assert not kops.tuned_defaults_enabled()
-        finally:
-            kops.set_impl("auto")
-            kops.set_tuned_defaults(False)
+        for name in ("set_default_impl", "enable_tuned_defaults"):
+            assert not hasattr(kops, name)
+            assert not hasattr(kernels, name)
+            assert name not in kernels.__all__
 
 
 class TestTarget:

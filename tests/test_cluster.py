@@ -6,12 +6,12 @@ import math
 
 import pytest
 
+from repro import api
 from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, ClusterConfig,
                            block_cyclic, cluster_dma_timing, cluster_roofline,
-                           copift_extra_contention, evaluate_cluster,
-                           headline, optimal_point, scale_breakdown,
-                           scaling_efficiency, strong_scaling, sweep_points,
-                           weak_scaling)
+                           copift_extra_contention, headline, optimal_point,
+                           scale_breakdown, scaling_efficiency,
+                           strong_scaling, sweep_points, weak_scaling)
 from repro.cluster.dma import DmaTiming
 from repro.core.analytics import TABLE_I, geomean
 from repro.core.energy import copift_power, evaluate_energy
@@ -25,10 +25,16 @@ def single_pe():
                                TABLE_I[k].max_block) for k in KERNELS}
 
 
+def _evaluate(name, cfg=SNITCH_CLUSTER, n_cores=None, point=NOMINAL_POINT):
+    """The old evaluate_cluster(name, cfg, n, pt) call, via the facade."""
+    return api.evaluate(name, api.Target.homogeneous(
+        n_cores=n_cores, point=point, cluster=cfg))
+
+
 @pytest.fixture(scope="module")
 def cluster_1core():
     cfg = SNITCH_CLUSTER.with_cores(1)
-    return {k: evaluate_cluster(k, cfg, 1) for k in KERNELS}
+    return {k: _evaluate(k, cfg, 1) for k in KERNELS}
 
 
 class TestSingleCoreReduction:
@@ -124,15 +130,15 @@ class TestDma:
         every kernel at every swept core count (the double-buffering win)."""
         for name in KERNELS:
             for n in (1, 2, 4, 8, 16):
-                r = evaluate_cluster(name, SNITCH_CLUSTER.with_cores(n), n)
+                r = _evaluate(name, SNITCH_CLUSTER.with_cores(n), n)
                 assert not r.dma_bound
 
     def test_starved_bandwidth_binds_and_still_bounded(self):
         """A crippled DMA (0.5 B/cycle) turns expf memory-bound; cluster
         cycles equal the transfer term and never the compute+transfer sum."""
         cfg = ClusterConfig(dma_bytes_per_cycle=0.5)
-        r = evaluate_cluster("expf", cfg, 8)
-        fast = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        r = _evaluate("expf", cfg, 8)
+        fast = _evaluate("expf", SNITCH_CLUSTER, 8)
         assert r.dma_bound
         assert r.cycles_copift > fast.cycles_copift
         assert r.cycles_copift <= fast.cycles_copift \
@@ -166,7 +172,7 @@ class TestScheduler:
 class TestDvfs:
     def test_optimal_point_inside_ladder(self):
         for name in KERNELS:
-            r = evaluate_cluster(name, SNITCH_CLUSTER, 8)
+            r = _evaluate(name, SNITCH_CLUSTER, 8)
             best, sweep = optimal_point(SNITCH_CLUSTER, name, 8,
                                         r.cycles_per_elem)
             assert best.point in SNITCH_CLUSTER.operating_points
@@ -176,7 +182,7 @@ class TestDvfs:
             assert vmin <= best.point.vdd <= vmax
 
     def test_optimal_is_min_energy_among_feasible(self):
-        r = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        r = _evaluate("expf", SNITCH_CLUSTER, 8)
         best, sweep = optimal_point(SNITCH_CLUSTER, "expf", 8,
                                     r.cycles_per_elem, power_cap_mw=300.0)
         feas = [s for s in sweep if s.feasible]
@@ -187,13 +193,13 @@ class TestDvfs:
     def test_power_cap_moves_the_optimum_down(self):
         """A cluster power budget forces a lower-voltage point than the
         uncapped optimum would need at high core counts."""
-        r = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        r = _evaluate("expf", SNITCH_CLUSTER, 8)
         best_cap, _ = optimal_point(SNITCH_CLUSTER, "expf", 8,
                                     r.cycles_per_elem, power_cap_mw=100.0)
         assert best_cap.cluster_power_mw <= 100.0
 
     def test_infeasible_cap_falls_back_to_lowest_power(self):
-        r = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
+        r = _evaluate("expf", SNITCH_CLUSTER, 8)
         best, sweep = optimal_point(SNITCH_CLUSTER, "expf", 8,
                                     r.cycles_per_elem, power_cap_mw=1.0)
         assert best.cluster_power_mw == min(s.cluster_power_mw for s in sweep)

@@ -12,10 +12,11 @@ under the same power cap.
 
 import pytest
 
+from repro import api
 from repro.cluster import (NOMINAL_POINT, SNITCH_CLUSTER, ClusterConfig,
-                           DvfsIsland, compare_strategies, evaluate_cluster,
-                           evaluate_cluster_het, het_cluster_power_mw,
-                           cluster_power_mw, parse_islands)
+                           DvfsIsland, compare_strategies,
+                           het_cluster_power_mw, cluster_power_mw,
+                           parse_islands)
 from repro.cluster.scheduler import STRATEGIES
 from repro.core.analytics import TABLE_I
 from repro.core.energy import evaluate_energy
@@ -26,6 +27,18 @@ BIG = SNITCH_CLUSTER.point("1.45GHz@1.00V")
 LITTLE = SNITCH_CLUSTER.point("0.50GHz@0.60V")
 BIG_LITTLE = SNITCH_CLUSTER.with_islands(DvfsIsland(2, BIG),
                                          DvfsIsland(6, LITTLE))
+
+
+def _hom(name, n_cores=8, point=NOMINAL_POINT):
+    """The old homogeneous evaluate_cluster call, via the facade."""
+    return api.evaluate(name, api.Target.homogeneous(n_cores=n_cores,
+                                                     point=point))
+
+
+def _het(name, cfg, strategy="lpt", total_blocks=None):
+    """The old evaluate_cluster_het call, via the facade."""
+    return api.evaluate(name, api.Target(cluster=cfg, strategy=strategy),
+                        total_blocks=total_blocks)
 
 
 class TestTopology:
@@ -71,8 +84,8 @@ class TestHomogeneousReduction:
     @pytest.mark.parametrize("strategy", STRATEGIES)
     @pytest.mark.parametrize("name", KERNELS)
     def test_cluster_8core_nominal_exact(self, name, strategy):
-        hom = evaluate_cluster(name, SNITCH_CLUSTER, 8)
-        het = evaluate_cluster_het(name, SNITCH_CLUSTER, strategy)
+        hom = _hom(name)
+        het = _het(name, SNITCH_CLUSTER, strategy)
         assert het.cycles_copift == hom.cycles_copift
         assert het.cycles_base == hom.cycles_base
         assert het.speedup == hom.speedup
@@ -96,7 +109,7 @@ class TestHomogeneousReduction:
             pe = evaluate_kernel(name, baseline_trace(name),
                                  copift_schedule(name),
                                  TABLE_I[name].max_block)
-            het = evaluate_cluster_het(name, cfg1, strategy)
+            het = _het(name, cfg1, strategy)
             assert het.speedup == pe.speedup
             assert het.ipc_copift == pe.ipc_copift
             assert het.cycles_copift == pe.cycles_copift
@@ -108,8 +121,8 @@ class TestHomogeneousReduction:
     def test_explicit_uniform_islands_also_exact(self):
         cfg = SNITCH_CLUSTER.with_islands(DvfsIsland(3, NOMINAL_POINT),
                                           DvfsIsland(5, NOMINAL_POINT))
-        hom = evaluate_cluster("expf", SNITCH_CLUSTER, 8)
-        het = evaluate_cluster_het("expf", cfg, "lpt")
+        hom = _hom("expf")
+        het = _het("expf", cfg, "lpt")
         assert het.cycles_copift == hom.cycles_copift
         assert het.energy_pj_per_elem == hom.energy_pj_per_elem
 
@@ -129,25 +142,25 @@ class TestHeterogeneousBehavior:
         assert res["lpt"].imbalance < res["block_cyclic"].imbalance
 
     def test_big_cores_get_more_blocks(self):
-        r = evaluate_cluster_het("expf", BIG_LITTLE, "lpt", total_blocks=48)
+        r = _het("expf", BIG_LITTLE, "lpt", total_blocks=48)
         big_share = min(r.blocks_per_core[:2])
         little_share = max(r.blocks_per_core[2:])
         assert big_share > little_share
 
     def test_reference_clock_is_the_fastest_island(self):
-        r = evaluate_cluster_het("expf", BIG_LITTLE, "lpt")
+        r = _het("expf", BIG_LITTLE, "lpt")
         assert r.ref_freq_ghz == BIG.freq_ghz
 
     def test_mixed_islands_power_between_extremes(self):
-        r = evaluate_cluster_het("expf", BIG_LITTLE, "lpt")
-        all_big = evaluate_cluster("expf", SNITCH_CLUSTER, 8, BIG)
-        all_little = evaluate_cluster("expf", SNITCH_CLUSTER, 8, LITTLE)
+        r = _het("expf", BIG_LITTLE, "lpt")
+        all_big = _hom("expf", point=BIG)
+        all_little = _hom("expf", point=LITTLE)
         assert all_little.power_copift_mw < r.power_copift_mw \
             < all_big.power_copift_mw
 
     def test_needs_at_least_one_block(self):
         with pytest.raises(ValueError):
-            evaluate_cluster_het("expf", BIG_LITTLE, total_blocks=0)
+            _het("expf", BIG_LITTLE, total_blocks=0)
 
 
 class TestHeterogeneousTuner:

@@ -1,0 +1,156 @@
+"""Property tests for the manycore layer (``repro.system``): block
+conservation through the hierarchical scheduler, the exact reduction of
+uniform-cluster assignment onto a single-level ``assign``, and HBM
+bandwidth monotonicity in the NoC's water-filling arbiter.
+
+Property-based cases run when ``hypothesis`` is installed (the CI
+configuration); example-based cases pin the same invariants on a bare
+install.
+"""
+
+import math
+
+import pytest
+
+from repro.cluster.scheduler import STRATEGIES, assign
+from repro.cluster.topology import SNITCH_CLUSTER
+from repro.system import (SystemConfig, assign_system, fair_shares,
+                          system_transfer_cycles)
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+SPEED_LADDER = (0.50, 0.75, 1.00, 1.25, 1.45)
+
+
+def _cluster_speeds_strategy():
+    """1..6 clusters of 1..8 cores each, speeds off the DVFS ladder."""
+    core_speeds = st.lists(st.sampled_from(SPEED_LADDER),
+                           min_size=1, max_size=8)
+    return st.lists(core_speeds, min_size=1, max_size=6)
+
+
+class TestExamples:
+    """Example-based invariants (always run, even without hypothesis)."""
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("n_blocks,clusters", [
+        (0, ((1.0,) * 8, (1.0,) * 8)),
+        (1, ((0.5, 1.45), (1.0,))),
+        (48, ((1.0,) * 8,) * 4),
+        (97, ((1.45, 1.45, 0.5), (0.75,) * 5, (1.0, 1.25))),
+    ])
+    def test_block_conservation_across_clusters(self, strategy, n_blocks,
+                                                clusters):
+        sa = assign_system(n_blocks, clusters, cluster_strategy=strategy,
+                           core_strategy=strategy)
+        assert sum(sa.cluster_blocks) == n_blocks
+        for share, inner in zip(sa.cluster_blocks, sa.core_assignments):
+            assert sum(inner.blocks_per_core) == share
+        assert sum(sa.flat.blocks_per_core) == n_blocks
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_uniform_clusters_reduce_to_single_level(self, strategy):
+        """Uniform clusters: the hierarchical split hands out the same
+        per-cluster multiset of core loads a flat single-level assign
+        would give each cluster's share."""
+        clusters = ((1.0,) * 8,) * 4
+        sa = assign_system(96, clusters, cluster_strategy=strategy,
+                           core_strategy=strategy)
+        for share, inner in zip(sa.cluster_blocks, sa.core_assignments):
+            flat = assign(share, (1.0,) * 8, strategy)
+            assert sorted(inner.blocks_per_core) == \
+                sorted(flat.blocks_per_core)
+
+    def test_fair_shares_split_the_budget(self):
+        shares = fair_shares((64.0, 64.0, 64.0, 64.0), 64.0)
+        assert shares == (16.0,) * 4
+        # Narrow streams keep their width; leftover re-splits.
+        shares = fair_shares((4.0, 64.0, 64.0), 64.0)
+        assert shares[0] == 4.0
+        assert shares[1] == shares[2] == 30.0
+        assert sum(shares) <= 64.0 + 1e-12
+
+    def test_hbm_monotone_example(self):
+        sys16 = SystemConfig.homogeneous(4, SNITCH_CLUSTER,
+                                         hbm_bytes_per_cycle=16.0)
+        sys64 = sys16.with_hbm(64.0)
+        free = sys16.with_hbm(None)
+        nbytes = (40192,) * 4
+        t16 = system_transfer_cycles(sys16, nbytes)
+        t64 = system_transfer_cycles(sys64, nbytes)
+        tf = system_transfer_cycles(free, nbytes)
+        assert all(b <= a for a, b in zip(t16, t64))
+        assert all(b <= a for a, b in zip(t64, tf))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestProperties:
+    """Randomized invariants over block counts x cluster shapes x HBM."""
+
+    @settings(max_examples=150, deadline=None)
+    @given(n_blocks=st.integers(min_value=0, max_value=512),
+           clusters=_cluster_speeds_strategy(),
+           cluster_strategy=st.sampled_from(STRATEGIES),
+           core_strategy=st.sampled_from(STRATEGIES))
+    def test_block_conservation(self, n_blocks, clusters, cluster_strategy,
+                                core_strategy):
+        clusters = tuple(tuple(c) for c in clusters)
+        sa = assign_system(n_blocks, clusters,
+                           cluster_strategy=cluster_strategy,
+                           core_strategy=core_strategy)
+        assert sum(sa.cluster_blocks) == n_blocks
+        for share, inner in zip(sa.cluster_blocks, sa.core_assignments):
+            assert sum(inner.blocks_per_core) == share
+            assert all(b >= 0 for b in inner.blocks_per_core)
+        flat = sa.flat
+        assert sum(flat.blocks_per_core) == n_blocks
+        assert flat.n_cores == sum(len(c) for c in clusters)
+
+    @settings(max_examples=150, deadline=None)
+    @given(n_blocks=st.integers(min_value=0, max_value=512),
+           n_clusters=st.integers(min_value=1, max_value=6),
+           n_cores=st.integers(min_value=1, max_value=8),
+           speed=st.sampled_from(SPEED_LADDER),
+           strategy=st.sampled_from(STRATEGIES))
+    def test_uniform_reduces_to_single_level(self, n_blocks, n_clusters,
+                                             n_cores, speed, strategy):
+        clusters = ((speed,) * n_cores,) * n_clusters
+        sa = assign_system(n_blocks, clusters, cluster_strategy=strategy,
+                           core_strategy=strategy)
+        for share, inner in zip(sa.cluster_blocks, sa.core_assignments):
+            flat = assign(share, (speed,) * n_cores, strategy)
+            assert sorted(inner.blocks_per_core) == \
+                sorted(flat.blocks_per_core)
+
+    @settings(max_examples=150, deadline=None)
+    @given(widths=st.lists(st.sampled_from((4.0, 16.0, 64.0)),
+                           min_size=1, max_size=8),
+           hbm_lo=st.floats(min_value=1.0, max_value=256.0),
+           scale=st.floats(min_value=1.0, max_value=8.0))
+    def test_fair_shares_monotone_in_budget(self, widths, hbm_lo, scale):
+        widths = tuple(widths)
+        lo = fair_shares(widths, hbm_lo)
+        hi = fair_shares(widths, hbm_lo * scale)
+        assert all(b >= a - 1e-9 for a, b in zip(lo, hi))
+        assert all(s <= w + 1e-9 for s, w in zip(lo, widths))
+        assert sum(lo) <= hbm_lo + 1e-9 or sum(widths) <= hbm_lo
+
+    @settings(max_examples=100, deadline=None)
+    @given(n_clusters=st.integers(min_value=1, max_value=6),
+           blocks_per_cluster=st.integers(min_value=1, max_value=64),
+           hbm_lo=st.floats(min_value=2.0, max_value=128.0),
+           scale=st.floats(min_value=1.0, max_value=16.0))
+    def test_transfer_cycles_monotone_in_hbm(self, n_clusters,
+                                             blocks_per_cluster, hbm_lo,
+                                             scale):
+        """More HBM bandwidth never increases any cluster's transfer
+        cycles, and the unconstrained system lower-bounds them all."""
+        nbytes = tuple(2512 * blocks_per_cluster for _ in range(n_clusters))
+        base = SystemConfig.homogeneous(n_clusters, SNITCH_CLUSTER,
+                                        hbm_bytes_per_cycle=hbm_lo)
+        lo = system_transfer_cycles(base, nbytes)
+        hi = system_transfer_cycles(base.with_hbm(hbm_lo * scale), nbytes)
+        free = system_transfer_cycles(base.with_hbm(None), nbytes)
+        assert all(b <= a for a, b in zip(lo, hi))
+        assert all(f <= b for f, b in zip(free, hi))
+        assert all(t >= math.ceil(n / SNITCH_CLUSTER.dma_bytes_per_cycle)
+                   for t, n in zip(lo, nbytes))

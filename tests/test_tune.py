@@ -293,13 +293,13 @@ class TestIntegration:
         from repro.kernels import ops as kops
         rows = kops._resolve_rows("expf", None, 64)
         assert rows == 64
-        kops.enable_tuned_defaults(True)
+        kops.set_tuned_defaults(True)
         try:
             tuned = kops._resolve_rows("expf", None, 64)
             assert 1 <= tuned <= 64
             assert kops._resolve_rows("expf", 16, 64) == 16
         finally:
-            kops.enable_tuned_defaults(False)
+            kops.set_tuned_defaults(False)
         assert kops._resolve_rows("expf", None, 64) == 64
 
     def test_tune_bench_generate_contract(self):
