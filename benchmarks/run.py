@@ -51,8 +51,8 @@ import traceback
 
 def _sections() -> list[tuple[str, object]]:
     from benchmarks import (cluster_sweep, fig2, fig3, kernels_bench,
-                            obs_bench, perf_bench, serve_bench,
-                            system_bench, table1, tune_bench)
+                            obs_bench, perf_bench, resilience_bench,
+                            serve_bench, system_bench, table1, tune_bench)
     sections = [
         ("table1", table1.run),
         ("fig2", fig2.run),
@@ -64,6 +64,7 @@ def _sections() -> list[tuple[str, object]]:
         ("obs", obs_bench.run),
         ("serve", serve_bench.run),
         ("system", system_bench.run),
+        ("resilience", resilience_bench.run),
     ]
     try:
         from benchmarks import roofline
@@ -104,6 +105,9 @@ def _structured(name: str):
     if name == "system":
         from benchmarks import system_bench
         return system_bench.structured()
+    if name == "resilience":
+        from benchmarks import resilience_bench
+        return resilience_bench.structured()
     return None
 
 

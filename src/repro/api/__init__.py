@@ -44,6 +44,8 @@ from repro.api.tuner import Tuner
 from repro.cluster.topology import (NOMINAL_POINT, OPERATING_POINTS,
                                     SNITCH_CLUSTER, ClusterConfig, DvfsIsland,
                                     OperatingPoint, parse_islands)
+from repro.resilience.faults import (AllCoresDeadError, FaultState,
+                                     FaultTrace, make_faults)
 from repro.system.topology import SystemConfig, parse_system
 
 _DEFAULT_TUNER: "Tuner | None" = None
@@ -68,4 +70,5 @@ __all__ = [
     "NOMINAL_POINT", "OPERATING_POINTS", "SNITCH_CLUSTER", "ClusterConfig",
     "DvfsIsland", "OperatingPoint", "parse_islands",
     "SystemConfig", "parse_system",
+    "FaultTrace", "FaultState", "make_faults", "AllCoresDeadError",
 ]

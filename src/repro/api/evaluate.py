@@ -127,14 +127,21 @@ class _ClusterPass:
 
 def _price_cluster(cfg, name: str, core_points, block: int,
                    total_blocks: int, strategy: str,
-                   f_ref: float) -> _ClusterPass:
+                   f_ref: float, alive=None) -> _ClusterPass:
     """Price ``total_blocks`` blocks of ``name`` on one cluster — the exact
     per-cluster body of :func:`evaluate`'s default-plan path, factored out
     so the system layer reduces over the *same expression tree* (the
     bit-for-bit 1-cluster invariant).  ``f_ref`` is the caller's reference
     clock: the cluster's own fastest core for a lone cluster, the
-    system-wide fastest for a manycore part."""
-    speeds = tuple(p.freq_ghz for p in core_points)
+    system-wide fastest for a manycore part.
+
+    ``alive`` (``repro.resilience``) is an optional per-core survival
+    mask: dead cores enter the assignment at speed 0, take zero blocks,
+    and thereby drop out of contention, compute and power the same way an
+    idle core always has.  ``None`` — the fault-free case — is the
+    historical expression, untouched."""
+    speeds = tuple(p.freq_ghz if alive is None or alive[i] else 0.0
+                   for i, p in enumerate(core_points))
     assignment = assign(total_blocks, speeds, strategy)
     active = tuple(i for i, b in enumerate(assignment.blocks_per_core) if b)
     act_speeds = tuple(speeds[i] for i in active)
@@ -155,6 +162,18 @@ def _price_cluster(cfg, name: str, core_points, block: int,
                         extras_b=extras_b, compute_c=compute_c,
                         compute_b=compute_b, instrs_c=instrs_c,
                         instrs_b=instrs_b, power_b=power_b, power_c=power_c)
+
+
+def _resolve_faults(faults, t_ms: float):
+    """``faults=`` → a non-trivial ``FaultState``, or ``None`` when there
+    is nothing to degrade.  ``None`` is the contract with the callers: it
+    means *take the historical code path verbatim* (the empty-trace
+    bit-for-bit pin), not merely "an empty mask"."""
+    if faults is None:
+        return None
+    from repro.resilience.degrade import resolve_state
+    state = resolve_state(faults, t_ms)
+    return None if state.is_trivial else state
 
 
 def _resolve_plan(spec, plan):
@@ -192,7 +211,7 @@ def _plan_cluster_power(cfg, spec, sched, block, act_points) -> float:
 def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
              blocks_per_core: int = 1,
              total_blocks: int | None = None,
-             plan=None) -> Report:
+             plan=None, faults=None, fault_t_ms: float = 0.0) -> Report:
     """Evaluate one kernel on one target; the facade's front door.
 
     Weak scaling by default (``blocks_per_core`` blocks per core); pass
@@ -209,6 +228,16 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
     comparable ``Report``\\ s (the input to ``obs.attrib``).  ``plan=None``
     is the registry default and stays bit-for-bit the historical path.
     The RV32G baseline side is never plan-transformed.
+
+    ``faults`` (``repro.resilience``) prices the target *degraded*: a
+    :class:`~repro.resilience.faults.FaultTrace` is sampled at
+    ``fault_t_ms`` (or pass a ``FaultState`` directly), dead cores drop
+    out of scheduling/contention/power via the survival mask, throttled
+    islands are re-pointed down the DVFS ladder, and on system targets a
+    degraded HBM link narrows the arbitrated port.  A trivial state (the
+    empty trace) takes the historical expression verbatim — pinned
+    bit-for-bit in ``tests/test_resilience.py`` — and an all-cores-dead
+    state raises :class:`~repro.resilience.faults.AllCoresDeadError`.
     """
     spec = kernel(spec)
     if not spec.simulatable:
@@ -222,13 +251,24 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
         # clusters (lazy import — repro.system imports api internals).
         from repro.system.analytics import evaluate_system
         return evaluate_system(spec, target, blocks_per_core=blocks_per_core,
-                               total_blocks=total_blocks, plan=plan)
+                               total_blocks=total_blocks, plan=plan,
+                               faults=faults, fault_t_ms=fault_t_ms)
     name = spec.isa_name
     cfg = target.cluster
 
     core_points = target.core_points
-    speeds = tuple(p.freq_ghz for p in core_points)
-    f_ref = max(speeds)
+    fstate = _resolve_faults(faults, fault_t_ms)
+    if fstate is None:
+        alive = None
+        speeds = tuple(p.freq_ghz for p in core_points)
+        f_ref = max(speeds)
+    else:
+        from repro.resilience.degrade import (degrade_cluster, masked_speeds,
+                                              require_survivors)
+        core_points, alive = degrade_cluster(cfg, core_points, fstate)
+        speeds = masked_speeds(core_points, alive)
+        require_survivors(speeds, f"the {cfg.n_cores}-core cluster target")
+        f_ref = max(speeds)
     if plan is None:
         plan_sched = plan_profile = None
         pipelined = True
@@ -246,7 +286,7 @@ def evaluate(spec: "KernelSpec | str", target: Target | None = None, *,
                    total_blocks=total_blocks, strategy=target.strategy):
         if plan is None:
             cp = _price_cluster(cfg, name, core_points, block, total_blocks,
-                                target.strategy, f_ref)
+                                target.strategy, f_ref, alive)
             assignment, active = cp.assignment, cp.active
             act_speeds, act_blocks = cp.act_speeds, cp.act_blocks
             extras_c, extras_b = cp.extras_c, cp.extras_b

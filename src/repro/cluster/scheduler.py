@@ -71,8 +71,11 @@ class WorkAssignment:
         ``blocks_i / speed_i`` (``blocks_i`` when speeds are uniform)."""
         if self.core_speeds is None:
             return tuple(float(b) for b in self.blocks_per_core)
-        return tuple(b / s for b, s in zip(self.blocks_per_core,
-                                           self.core_speeds))
+        # Zero-speed (dead) cores hold zero blocks by construction, so
+        # they finish at 0 rather than 0/0.
+        return tuple(b / s if s > 0 else 0.0
+                     for b, s in zip(self.blocks_per_core,
+                                     self.core_speeds))
 
     @property
     def makespan(self) -> float:
@@ -158,8 +161,29 @@ def assign(n_blocks: int, core_speeds: tuple[float, ...] | list[float],
     if n_blocks < 0 or not speeds:
         raise ValueError(f"bad assignment: {n_blocks} blocks, "
                          f"{len(speeds)} cores")
-    if any(s <= 0 for s in speeds):
-        raise ValueError(f"core speeds must be positive, got {speeds}")
+    if any(s < 0 for s in speeds):
+        raise ValueError(f"core speeds must be >= 0, got {speeds}")
+    if any(s == 0 for s in speeds):
+        # Survival masks (repro.resilience): speed 0 marks a dead core.
+        # Work routes over the surviving subset by the same strategy —
+        # including block_cyclic, which is speed-blind among survivors
+        # but must never hand a block to a failed core — and zeros are
+        # scattered back so per-core counts stay index-aligned.
+        alive = tuple(i for i, s in enumerate(speeds) if s > 0)
+        if not alive:
+            if n_blocks:
+                raise ValueError(f"no core with positive speed to take "
+                                 f"{n_blocks} blocks; speeds={speeds}")
+            return WorkAssignment(n_blocks=0, n_cores=len(speeds),
+                                  blocks_per_core=(0,) * len(speeds),
+                                  core_speeds=speeds)
+        sub = assign(n_blocks, tuple(speeds[i] for i in alive), strategy)
+        per_core = [0] * len(speeds)
+        for i, b in zip(alive, sub.blocks_per_core):
+            per_core[i] = b
+        return WorkAssignment(n_blocks=n_blocks, n_cores=len(speeds),
+                              blocks_per_core=tuple(per_core),
+                              core_speeds=speeds)
     if strategy == "block_cyclic":
         per_core = block_cyclic(n_blocks, len(speeds)).blocks_per_core
     elif strategy == "static_proportional":

@@ -10,7 +10,12 @@ single-step diff still trips the gate.
 Store location: the ``path`` argument, else ``$REPRO_METRIC_HISTORY``,
 else ``./BENCH_history.jsonl``.  Records are self-describing and the
 reader is tolerant — a truncated/corrupt line (interrupted CI upload) is
-skipped and counted, never fatal.
+skipped and counted, never fatal.  An unwritable location (read-only
+checkout, ``$REPRO_METRIC_HISTORY`` into a dead mount) degrades to an
+in-process memory store with one ``RuntimeWarning`` — same contract as
+``repro.tune.cache``: history *observes*, it never gates, so a benchmark
+run must not die on the append.  ``read_history`` merges the memory
+records back in, so same-process regression checks still see them.
 
 Regression semantics (``detect_regressions``):
 
@@ -37,11 +42,19 @@ import statistics
 import subprocess
 import sys
 import time
+import warnings
 from fnmatch import fnmatch
 
 SCHEMA = 1
 ENV_VAR = "REPRO_METRIC_HISTORY"
 DEFAULT_FILENAME = "BENCH_history.jsonl"
+
+#: In-process fallback store, keyed by resolved path: records that could
+#: not be appended because the location is unwritable.  One warning per
+#: path per process (``_WARNED``); nothing persists, but same-process
+#: readers still see the records.
+_MEMORY: dict = {}
+_WARNED: set = set()
 
 #: First-match metric-name classification.  Wall-clock figures (host
 #: seconds, throughput, measured overheads) are advisory: CI runners are
@@ -75,6 +88,16 @@ DIRECTION_RULES: tuple = (
     # ``system.eff.compute.*`` rows read as quality metrics.
     ("*eff*", "lower_worse"),
     ("*saturated*", "higher_worse"),
+    # Resilience figures (benchmarks/resilience_bench.py): lost requests,
+    # retries, killed batches and failover remaps must not creep up on
+    # the calibrated chaos scenario, and the completed fraction must not
+    # fall.  ``*completed_frac*`` sits before the catch-all; the rest
+    # are deterministic fault-loop outputs like the serve rows above.
+    ("*completed_frac*", "lower_worse"),
+    ("*lost*", "higher_worse"),
+    ("*retried*", "higher_worse"),
+    ("*killed*", "higher_worse"),
+    ("*failovers*", "higher_worse"),
     ("*energy*", "higher_worse"),
     ("*power*", "higher_worse"),
     ("*", "advisory"),
@@ -160,8 +183,17 @@ def append_record(metrics: dict, *, source: str,
         "meta": dict(meta or {}),
     }
     p = history_path(path)
-    with open(p, "a") as f:
-        f.write(json.dumps(record, sort_keys=True) + "\n")
+    line = json.dumps(record, sort_keys=True)
+    try:
+        with open(p, "a") as f:
+            f.write(line + "\n")
+    except OSError as e:
+        _MEMORY.setdefault(p, []).append(record)
+        if p not in _WARNED:
+            _WARNED.add(p)
+            warnings.warn(f"metric history at {p!r} is not writable "
+                          f"({e}); falling back to in-memory records",
+                          RuntimeWarning, stacklevel=2)
     return record
 
 
@@ -180,7 +212,9 @@ def read_history(path: "str | os.PathLike | None" = None,
                  source: "str | None" = None) -> list[dict]:
     """All parseable records, oldest first.  Corrupt/truncated lines are
     skipped (counted in the module-level return via ``read_history.skipped``
-    — rebound per call) rather than failing the gate."""
+    — rebound per call) rather than failing the gate.  Records held in the
+    in-memory fallback (unwritable path) are appended after the on-disk
+    ones — they are by construction the newest for that path."""
     p = history_path(path)
     records: list[dict] = []
     skipped = 0
@@ -201,8 +235,13 @@ def read_history(path: "str | os.PathLike | None" = None,
                 if source is not None and rec.get("source") != source:
                     continue
                 records.append(rec)
-    except FileNotFoundError:
+    except OSError:
+        # Missing or unreadable store reads as empty — the in-memory
+        # fallback below still surfaces same-process records.
         pass
+    for rec in _MEMORY.get(p, []):
+        if source is None or rec.get("source") == source:
+            records.append(rec)
     read_history.skipped = skipped
     return records
 

@@ -8,6 +8,8 @@ stack (jax tracing), while the simulator runs purely on the analytic
 cost models — ``from repro.serve import simulate`` must stay cheap.
 """
 
+from repro.resilience.failover import FailoverPolicy, RetryPolicy
+from repro.resilience.faults import FaultTrace, make_faults
 from repro.serve.policies import (POLICIES, ModelPredictivePolicy, Policy,
                                   ReactivePolicy, StaticPolicy,
                                   plan_for_rate, plan_grid)
@@ -22,4 +24,7 @@ __all__ = [
     "simulate", "PERCENTILES",
     "Policy", "StaticPolicy", "ReactivePolicy", "ModelPredictivePolicy",
     "plan_grid", "plan_for_rate", "POLICIES",
+    # Resilience surface (re-exported: simulate(faults=..., retry=...)
+    # consumes these; repro.resilience is the home package).
+    "FaultTrace", "make_faults", "RetryPolicy", "FailoverPolicy",
 ]

@@ -319,32 +319,44 @@ class SimReport:
     slo: SloSpec | None
     plan_switches: int        # control decisions that changed the plan
     n_shed: int = 0           # rejected by SLO-aware admission (pre-queue)
+    n_failed: int = 0         # in-flight batches killed by fault events
+    n_retried: int = 0        # requests re-enqueued by the retry policy
+    n_lost: int = 0           # requests permanently lost to faults
+    failovers: int = 0        # control epochs that remapped onto survivors
     latencies_ms: tuple = field(repr=False, default=())
 
     def percentile(self, q: float) -> float:
         return _nearest_rank(self.latencies_ms, q)
 
     @property
+    def completed_frac(self) -> float:
+        """Fraction of offered requests that completed — the resilience
+        bench's availability figure (1.0 on a healthy run)."""
+        return self.n_completed / self.n_requests if self.n_requests \
+            else 1.0
+
+    @property
     def slo_met(self) -> bool:
         """SLO holds iff the bound percentile is within budget AND no
-        request was turned away (a dropped *or shed* request is an
+        request was turned away (a dropped, shed *or lost* request is an
         infinite-latency one)."""
         if self.slo is None:
             return True
-        if self.n_dropped or self.n_shed or not self.n_completed:
+        if self.n_dropped or self.n_shed or self.n_lost \
+                or not self.n_completed:
             return False
         return self.percentile(self.slo.percentile) <= self.slo.latency_ms
 
     @property
     def slo_violations(self) -> int:
         """Requests that individually missed the SLO: dropped + shed +
-        completed past the latency bound — the apples-to-apples count for
-        comparing admission policies on one trace."""
+        lost + completed past the latency bound — the apples-to-apples
+        count for comparing admission/failover policies on one trace."""
         if self.slo is None:
-            return self.n_dropped + self.n_shed
+            return self.n_dropped + self.n_shed + self.n_lost
         late = sum(1 for lat in self.latencies_ms
                    if lat > self.slo.latency_ms)
-        return self.n_dropped + self.n_shed + late
+        return self.n_dropped + self.n_shed + self.n_lost + late
 
     @property
     def energy_uj_per_request(self) -> float:
@@ -357,6 +369,12 @@ class SimReport:
                if self.slo else "none")
         pct = "  ".join(f"{k}={v:.3f}ms"
                         for k, v in self.latency_ms.items())
+        fault = ([f"  faults: batches_killed={self.n_failed} "
+                  f"retried={self.n_retried} lost={self.n_lost} "
+                  f"failovers={self.failovers}  "
+                  f"completed_frac={self.completed_frac:.4f}"]
+                 if (self.n_failed or self.n_retried or self.n_lost
+                     or self.failovers) else [])
         return [
             f"policy={self.policy}  trace={self.trace_spec!r} "
             f"seed={self.trace_seed}",
@@ -370,7 +388,7 @@ class SimReport:
             f"{self.idle_energy_uj:.2f}; "
             f"{self.energy_uj_per_request:.3f}uJ/req)  "
             f"peak_power={self.peak_power_mw:.1f}mW  slo: {slo}",
-        ]
+        ] + fault
 
 
 def _empty_report(trace, policy_name, slo) -> SimReport:
@@ -388,7 +406,8 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
              epoch_ms: float = 50.0, queue_cap: int = 64,
              pricer: ServicePricer | None = None,
              power_cap_mw: float | None = None,
-             admission: str = "tail_drop") -> SimReport:
+             admission: str = "tail_drop",
+             faults=None, retry=None) -> SimReport:
     """Run ``policy`` over ``trace`` and return a :class:`SimReport`.
 
     ``epoch_ms`` is the control period (the policy re-decides its
@@ -408,6 +427,18 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
       the bound.  Requires ``slo``; shed requests are reported as
       ``n_shed`` (they count as violations, like drops — the win is
       *fewer* total ``slo_violations`` on an overloaded trace).
+
+    ``faults`` takes a :class:`~repro.resilience.faults.FaultTrace`:
+    when it carries fail-stop events the run is delegated to
+    ``repro.resilience.failover.simulate_failover`` — in-flight batches
+    on failed cores are killed, their requests go through ``retry`` (a
+    :class:`~repro.resilience.failover.RetryPolicy`; ``None`` = killed
+    requests are lost outright), and slot partitions remap onto the
+    survivors at the next control epoch.  ``faults=None`` or a trace
+    with no fail-stop events runs this healthy loop verbatim — the
+    no-fault report is bit-for-bit the historical one (pinned in
+    ``tests/test_failover.py``).  Throttle/HBM windows are evaluate-path
+    degradations and do not alter serving dispatch.
     """
     if epoch_ms <= 0:
         raise ValueError(f"epoch_ms must be positive, got {epoch_ms}")
@@ -423,6 +454,13 @@ def simulate(trace, policy, *, slo: SloSpec | None = None,
     if not trace.requests:
         return _empty_report(trace, pname, slo)
     pricer = pricer or ServicePricer()
+    if faults is not None and faults.failstop_events():
+        from repro.resilience.failover import simulate_failover
+        return simulate_failover(trace, policy, slo=slo, epoch_ms=epoch_ms,
+                                 queue_cap=queue_cap, pricer=pricer,
+                                 power_cap_mw=power_cap_mw,
+                                 admission=admission, faults=faults,
+                                 retry=retry)
     n_cores = pricer.n_cores
     ctx = PolicyContext(pricer=pricer, kernel=trace.requests[0].kernel,
                         elems=trace.requests[0].elems, n_cores=n_cores,

@@ -26,6 +26,7 @@ from typing import Any, Callable
 
 import jax
 
+from repro.obs import metrics as _metrics
 from repro.train import checkpoint as ckpt
 
 
@@ -113,10 +114,17 @@ class StragglerMonitor:
     events: list[dict] = field(default_factory=list)
 
     def record(self, host: str, step: int, seconds: float) -> bool:
-        """Returns True if ``host`` is currently flagged as a straggler."""
+        """Returns True if ``host`` is currently flagged as a straggler.
+
+        Under ``obs.session(metrics=True)`` each call also publishes the
+        host's step time as a ``train.straggler.step_seconds.<host>``
+        gauge and counts detections on ``train.straggler.detected`` — the
+        fleet's health is readable from the same registry the serving
+        resilience counters land in."""
         h = self.history.setdefault(host, [])
         h.append(seconds)
         del h[:-self.window]
+        _metrics.set_gauge(f"train.straggler.step_seconds.{host}", seconds)
         latest = {k: v[-1] for k, v in self.history.items() if v}
         if len(latest) >= 2:
             sample = list(latest.values())
@@ -130,6 +138,8 @@ class StragglerMonitor:
         if z > self.threshold and seconds > self.min_ratio * med:
             self.events.append(dict(host=host, step=step, z=float(z),
                                     seconds=seconds))
+            _metrics.inc("train.straggler.detected")
+            _metrics.set_gauge(f"train.straggler.last_z.{host}", float(z))
             return True
         return False
 

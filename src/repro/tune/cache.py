@@ -138,3 +138,57 @@ def default_cache() -> TuneCache:
     if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != _default_path():
         _DEFAULT_CACHE = TuneCache()
     return _DEFAULT_CACHE
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro.tune.cache [--warm] [--clear]
+# ---------------------------------------------------------------------------
+
+def warm(names: "list[str] | None" = None, *,
+         path: "str | os.PathLike | None" = None) -> dict:
+    """Pre-price the default plan search for each registry kernel.
+
+    Runs every search through ``Tuner.plan`` itself — the same front
+    door, hence byte-identical cache keys — so a later in-process or
+    cross-process ``Tuner.plan(name)`` is a pure cache hit
+    (``TuneResult.from_cache``).  Returns ``{name: from_cache}`` for the
+    warming pass itself (True where the cache was already warm).
+    """
+    # Lazy: repro.api.tuner imports this module; the CLI direction must
+    # not import it at module scope.
+    from repro.api import Tuner, kernels
+    tuner = Tuner(cache=TuneCache(path) if path else None)
+    return {name: tuner.plan(name).from_cache
+            for name in (names or kernels())}
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="inspect / warm the persistent tuning cache")
+    ap.add_argument("--path", default=None,
+                    help="cache file (default $REPRO_TUNE_CACHE or "
+                         "~/.cache/repro-tune/cache.json)")
+    ap.add_argument("--warm", action="store_true",
+                    help="pre-price the default Tuner.plan search for "
+                         "every registry kernel")
+    ap.add_argument("--kernel", action="append", default=None,
+                    help="restrict --warm to this kernel (repeatable)")
+    ap.add_argument("--clear", action="store_true",
+                    help="empty the cache file")
+    args = ap.parse_args(argv)
+
+    store = TuneCache(args.path)
+    if args.clear:
+        store.clear()
+        print(f"tune.cache.cleared,{store.path}")
+    if args.warm:
+        hits = warm(args.kernel, path=args.path)
+        for name, was_warm in sorted(hits.items()):
+            print(f"tune.cache.warm,{name},"
+                  f"{'hit' if was_warm else 'priced'}")
+    print(f"tune.cache,{store.path},{len(store)}_entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -156,10 +156,65 @@ class TestDirectionRules:
         ("fig2/expf/cycles", "higher_worse"),
         ("table1/expf/energy_uj", "higher_worse"),
         ("cluster/expf/power_mw", "higher_worse"),
+        # Resilience rows (benchmarks/resilience_bench.py): losses,
+        # retries, kills and failovers must not creep up; the completed
+        # fraction must not fall — even on the failover(...) policy row,
+        # whose name would otherwise first-match nothing useful.
+        ("resilience/resilience.policy.static/lost", "higher_worse"),
+        ("resilience/resilience.policy.failover(static+1)/retried",
+         "higher_worse"),
+        ("resilience/resilience.policy.static/batches_killed",
+         "higher_worse"),
+        ("resilience/resilience.policy.failover(static+1)/failovers",
+         "higher_worse"),
+        ("resilience/resilience.policy.failover(static+1)/completed_frac",
+         "lower_worse"),
         ("something/else/entirely", "advisory"),
     ])
     def test_first_match_classification(self, name, want):
         assert history.metric_direction(name) == want
+
+
+class TestMemoryFallback:
+    """An unwritable store degrades to in-process records + one warning
+    (the ``tune.cache`` contract: history observes, it never gates)."""
+
+    def _unwritable(self, tmp_path):
+        blocker = tmp_path / "blocker"
+        blocker.write_text("not a directory")
+        return str(blocker / "hist.jsonl")   # open() -> NotADirectoryError
+
+    def test_append_warns_once_and_keeps_records(self, tmp_path):
+        import warnings
+        bad = self._unwritable(tmp_path)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            history.append_record({"m": 1.0}, source="t", path=bad, ts=1.0)
+            history.append_record({"m": 2.0}, source="t", path=bad, ts=2.0)
+        runtime = [w for w in caught
+                   if issubclass(w.category, RuntimeWarning)]
+        assert len(runtime) == 1
+        assert "in-memory" in str(runtime[0].message)
+        recs = history.read_history(bad, source="t")
+        assert [r["metrics"]["m"] for r in recs] == [1.0, 2.0]
+
+    def test_memory_records_feed_regression_detection(self, tmp_path):
+        import warnings
+        bad = self._unwritable(tmp_path)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            for i, speedup in enumerate((2.0, 2.0, 2.0, 1.0)):
+                history.append_record({"tune/expf/speedup": speedup},
+                                      source="t", path=bad, ts=float(i))
+        doc = history.detect_regressions(path=bad)
+        assert not doc["ok"]
+        assert doc["regressions"][0]["metric"] == "tune/expf/speedup"
+
+    def test_writable_path_untouched_by_fallback(self, tmp_path):
+        p = tmp_path / "hist.jsonl"
+        history.append_record({"m": 1.0}, source="t", path=p, ts=1.0)
+        assert str(p) not in history._MEMORY
+        assert len(history.read_history(p)) == 1
 
 
 class TestDetectRegressions:

@@ -1,0 +1,278 @@
+"""``repro.resilience`` — the fault model and graceful degradation.
+
+Covers the spec grammar (including every rejection path — a typo'd fault
+spec must fail loudly, not silently no-op), ``state_at`` accumulation
+semantics, trace determinism, the empty-trace bit-for-bit pin on
+``api.evaluate`` at cluster and system level, degraded pricing
+(dead cores / throttle windows / HBM narrowing all make the model
+*slower*, never faster), the all-dead error, and zero-speed survival
+masks in ``cluster.scheduler.assign``.
+"""
+
+import math
+
+import pytest
+
+from repro.api import (AllCoresDeadError, FaultState, FaultTrace, Target,
+                       evaluate, make_faults)
+from repro.cluster.scheduler import STRATEGIES, assign
+from repro.cluster.topology import SNITCH_CLUSTER
+from repro.resilience import (degrade_cluster, degrade_system_hbm,
+                              masked_speeds, resolve_state, throttled_point)
+from repro.system import SystemConfig
+
+
+# ---------------------------------------------------------------------------
+# Spec grammar
+# ---------------------------------------------------------------------------
+
+class TestGrammar:
+
+    def test_full_spec_parses(self):
+        tr = make_faults("corefail@2:c0.3,throttle@5-20:isl1>0.6GHz,"
+                         "hbm@10-15:0.5x,clusterfail@4:c1",
+                         duration_ms=50.0, n_clusters=2,
+                         cores_per_cluster=8)
+        kinds = [ev.kind for ev in tr.events]
+        assert kinds == ["corefail", "clusterfail", "throttle", "hbm"]
+        corefail = tr.events[0]
+        assert (corefail.cluster, corefail.core) == (0, 3)
+        assert corefail.t_end_ms == math.inf
+        throttle = tr.events[2]
+        assert (throttle.t_ms, throttle.t_end_ms) == (5.0, 20.0)
+        assert throttle.value == 0.6
+
+    def test_empty_spec_is_eventless(self):
+        assert make_faults("").events == ()
+        assert FaultTrace.empty().state_at(99.0).is_trivial
+
+    def test_mttf_spec(self):
+        tr = make_faults("mttf=5ms", duration_ms=200.0, seed=3,
+                         n_clusters=2, cores_per_cluster=4)
+        assert tr.events, "MTTF 5ms over 200ms should sample some deaths"
+        assert all(ev.kind == "corefail" for ev in tr.events)
+        # No core dies twice.
+        victims = [(ev.cluster, ev.core) for ev in tr.events]
+        assert len(victims) == len(set(victims))
+
+    @pytest.mark.parametrize("bad,msg", [
+        ("meteor@2:c0.1", "unknown fault kind"),
+        ("corefail@2", "missing ':<what>'"),
+        ("corefail@2:c0", "corefail needs"),
+        ("clusterfail@2:c0.1", "clusterfail takes"),
+        ("corefail@x:c0.1", "bad time token"),
+        ("throttle@9-5:isl0>0.6GHz", "bad time window"),
+        ("throttle@5-9:isl0>0GHz", "throttle cap must be positive"),
+        ("throttle@5-9:c0>0.6GHz", "bad throttle target"),
+        ("hbm@5-9:1.5x", "HBM multiplier must be in"),
+        ("hbm@5-9:half", "bad HBM multiplier"),
+        ("mttf=40s", "expected 'mttf=<ms>ms'"),
+        ("mttf=40ms,mttf=2ms", "duplicate mttf"),
+        ("corefail@2:c9.0", "references cluster 9"),
+        ("corefail@2:c0.99", "references core 99"),
+    ])
+    def test_rejections_name_the_problem(self, bad, msg):
+        with pytest.raises(ValueError, match=msg):
+            make_faults(bad, n_clusters=2, cores_per_cluster=8)
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError, match="duration_ms"):
+            make_faults("", duration_ms=0.0)
+        with pytest.raises(ValueError, match="n_clusters"):
+            make_faults("", n_clusters=0)
+
+
+# ---------------------------------------------------------------------------
+# state_at semantics
+# ---------------------------------------------------------------------------
+
+class TestStateAt:
+
+    TRACE = make_faults(
+        "corefail@2:c0.3,clusterfail@5:c1,throttle@5-20:isl0>0.6GHz,"
+        "throttle@10-15:isl0>0.5GHz,hbm@10-15:0.5x,hbm@12-14:0.8x",
+        duration_ms=50.0, n_clusters=2, cores_per_cluster=8)
+
+    def test_before_anything(self):
+        assert self.TRACE.state_at(1.0).is_trivial
+
+    def test_failstops_accumulate(self):
+        s = self.TRACE.state_at(6.0)
+        assert s.dead_cores == ((0, 3),)
+        assert s.dead_clusters == (1,)
+        assert s.core_dead(0, 3) and s.core_dead(1, 0)
+        assert not s.core_dead(0, 0)
+
+    def test_windows_end_failstops_do_not(self):
+        s = self.TRACE.state_at(30.0)
+        assert s.freq_caps == () and s.hbm_scale == 1.0
+        assert s.dead_cores == ((0, 3),) and s.dead_clusters == (1,)
+
+    def test_overlapping_throttles_take_min(self):
+        assert self.TRACE.state_at(12.0).freq_cap(0) == 0.5
+        assert self.TRACE.state_at(6.0).freq_cap(0) == 0.6
+        assert self.TRACE.state_at(6.0).freq_cap(1) is None
+
+    def test_overlapping_hbm_windows_multiply(self):
+        assert self.TRACE.state_at(13.0).hbm_scale == pytest.approx(0.4)
+        assert self.TRACE.state_at(11.0).hbm_scale == pytest.approx(0.5)
+
+    def test_cluster_death_absorbs_core_deaths(self):
+        tr = make_faults("corefail@1:c0.2,clusterfail@3:c0",
+                         n_clusters=1, cores_per_cluster=8)
+        s = tr.state_at(4.0)
+        assert s.dead_clusters == (0,) and s.dead_cores == ()
+
+    def test_resolve_state(self):
+        assert resolve_state(None).is_trivial
+        st = FaultState(dead_cores=((0, 1),))
+        assert resolve_state(st) is st
+        assert resolve_state(self.TRACE, 6.0) == self.TRACE.state_at(6.0)
+        with pytest.raises(TypeError, match="FaultTrace or FaultState"):
+            resolve_state("corefail@2:c0.3")
+
+
+# ---------------------------------------------------------------------------
+# Degradation mapping
+# ---------------------------------------------------------------------------
+
+class TestDegrade:
+
+    def test_throttled_point_picks_fastest_rung_under_cap(self):
+        ladder = SNITCH_CLUSTER.operating_points
+        nominal = SNITCH_CLUSTER.nominal
+        p = throttled_point(nominal, 0.8, ladder)
+        assert p.freq_ghz == 0.75
+        # Already-within-cap points are untouched (identity on health).
+        assert throttled_point(nominal, 1.0, ladder) is nominal
+        # A cap under the whole ladder clamps to the floor rung.
+        assert throttled_point(nominal, 0.1, ladder).freq_ghz == \
+            min(q.freq_ghz for q in ladder)
+
+    def test_degrade_cluster_masks_and_repoints(self):
+        pts = (SNITCH_CLUSTER.nominal,) * 4
+        st = FaultState(dead_cores=((0, 2),), freq_caps=((0, 0.6),))
+        points, alive = degrade_cluster(SNITCH_CLUSTER, pts, st)
+        assert alive == (True, True, False, True)
+        assert all(p.freq_ghz <= 0.6 for p in points)
+        assert masked_speeds(points, alive) == (0.5, 0.5, 0.0, 0.5)
+
+    def test_degrade_system_hbm(self):
+        sysc = SystemConfig.homogeneous(2, SNITCH_CLUSTER,
+                                        hbm_bytes_per_cycle=100.0)
+        out = degrade_system_hbm(sysc, FaultState(hbm_scale=0.5))
+        assert out.hbm_bytes_per_cycle == 50.0
+        # Trivial scale is the identity (same object, not a copy).
+        assert degrade_system_hbm(sysc, FaultState()) is sysc
+        # An unconstrained port becomes a real one at the scaled
+        # aggregate DMA width.
+        free = SystemConfig.homogeneous(2, SNITCH_CLUSTER)
+        out = degrade_system_hbm(free, FaultState(hbm_scale=0.5))
+        assert out.hbm_bytes_per_cycle == \
+            pytest.approx(free.aggregate_dma_bytes_per_cycle * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Zero-speed survival masks in the scheduler
+# ---------------------------------------------------------------------------
+
+class TestZeroSpeedAssign:
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_dead_cores_get_zero_blocks(self, strategy):
+        wa = assign(24, (1.0, 0.0, 1.0, 0.0), strategy)
+        assert wa.blocks_per_core[1] == 0 and wa.blocks_per_core[3] == 0
+        assert sum(wa.blocks_per_core) == 24
+        # Survivors carry exactly what a 2-core assign would give them.
+        inner = assign(24, (1.0, 1.0), strategy)
+        assert (wa.blocks_per_core[0], wa.blocks_per_core[2]) == \
+            tuple(inner.blocks_per_core)
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_all_dead(self, strategy):
+        with pytest.raises(ValueError, match="positive speed"):
+            assign(8, (0.0, 0.0), strategy)
+        # Zero work on a dead cluster is fine (idle clusters price as 0).
+        wa = assign(0, (0.0, 0.0), strategy)
+        assert tuple(wa.blocks_per_core) == (0, 0)
+
+    def test_negative_speed_rejected(self):
+        with pytest.raises(ValueError, match=">= 0"):
+            assign(8, (1.0, -0.5), "block_cyclic")
+
+
+# ---------------------------------------------------------------------------
+# api.evaluate(faults=...)
+# ---------------------------------------------------------------------------
+
+class TestEvaluateFaults:
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_empty_trace_bit_for_bit_cluster(self, strategy):
+        t = Target(strategy=strategy)
+        base = evaluate("expf", t, total_blocks=16)
+        assert evaluate("expf", t, total_blocks=16,
+                        faults=FaultTrace.empty()) == base
+        assert evaluate("expf", t, total_blocks=16,
+                        faults=make_faults("")) == base
+
+    def test_empty_trace_bit_for_bit_system(self):
+        t = Target.system(4, hbm_bytes_per_cycle=128.0)
+        base = evaluate("montecarlo", t, total_blocks=64)
+        faulted = evaluate("montecarlo", t, total_blocks=64,
+                           faults=FaultTrace.empty())
+        assert faulted == base
+
+    def test_dead_cores_slow_the_cluster(self):
+        t = Target()
+        base = evaluate("expf", t, total_blocks=32)
+        st = FaultState(dead_cores=((0, 0), (0, 1), (0, 2), (0, 3)))
+        degraded = evaluate("expf", t, total_blocks=32, faults=st)
+        assert degraded.cycles_copift > base.cycles_copift
+        assert degraded.blocks_per_core[:4] == (0, 0, 0, 0)
+        assert sum(degraded.blocks_per_core) == 32
+
+    def test_throttle_slows_the_cluster(self):
+        t = Target()
+        base = evaluate("expf", t, total_blocks=32)
+        st = FaultState(freq_caps=((0, 0.6),))
+        degraded = evaluate("expf", t, total_blocks=32, faults=st)
+        assert all(p.freq_ghz <= 0.6 for p in degraded.core_points)
+        assert degraded.time_us > base.time_us
+
+    def test_trace_sampling_at_time(self):
+        tr = make_faults("corefail@10:c0.0,corefail@10:c0.1",
+                         duration_ms=50.0)
+        t = Target()
+        before = evaluate("expf", t, total_blocks=32, faults=tr,
+                          fault_t_ms=5.0)
+        after = evaluate("expf", t, total_blocks=32, faults=tr,
+                         fault_t_ms=15.0)
+        assert before == evaluate("expf", t, total_blocks=32)
+        assert after.cycles_copift > before.cycles_copift
+
+    def test_dead_cluster_slows_the_system(self):
+        t = Target.system(4, hbm_bytes_per_cycle=128.0)
+        base = evaluate("montecarlo", t, total_blocks=64)
+        degraded = evaluate("montecarlo", t, total_blocks=64,
+                            faults=FaultState(dead_clusters=(1,)))
+        assert degraded.cycles_copift > base.cycles_copift
+
+    def test_hbm_degradation_is_monotone(self):
+        t = Target.system(4, hbm_bytes_per_cycle=64.0)
+        base = evaluate("montecarlo", t, total_blocks=128)
+        narrow = evaluate("montecarlo", t, total_blocks=128,
+                          faults=FaultState(hbm_scale=0.25))
+        assert narrow.cycles_copift >= base.cycles_copift
+
+    def test_all_dead_raises(self):
+        st = FaultState(dead_clusters=(0,))
+        with pytest.raises(AllCoresDeadError, match="no core alive"):
+            evaluate("expf", Target(), faults=st)
+        with pytest.raises(AllCoresDeadError):
+            evaluate("montecarlo", Target.system(2),
+                     faults=FaultState(dead_clusters=(0, 1)))
+
+    def test_bad_faults_type(self):
+        with pytest.raises(TypeError, match="FaultTrace or FaultState"):
+            evaluate("expf", Target(), faults="corefail@2:c0.3")

@@ -1,0 +1,128 @@
+"""Property tests for ``repro.resilience``: FaultTrace determinism (the
+whole point of seeded injection — a chaos run is a *replayable* artifact),
+the empty trace as the bit-for-bit identity on ``api.evaluate`` across
+kernels x strategies, and ``noc.fair_shares`` monotonicity under degraded
+HBM widths (a narrower port never makes any stream *faster*).
+
+Property-based cases run when ``hypothesis`` is installed (the CI
+configuration); example-based cases pin the same invariants on a bare
+install.
+"""
+
+import pytest
+
+from repro.api import Target, evaluate
+from repro.cluster.scheduler import STRATEGIES
+from repro.resilience import FaultTrace, make_faults
+from repro.system.noc import fair_shares
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+KERNELS = ("expf", "montecarlo")
+WIDTH_LADDER = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+
+#: Specs covering every event kind plus the stochastic MTTF sampler.
+SPECS = (
+    "",
+    "corefail@2:c0.3",
+    "clusterfail@5:c1,throttle@5-20:isl0>0.6GHz",
+    "hbm@10-15:0.5x,corefail@1:c0.0",
+    "mttf=40ms",
+    "mttf=15ms,throttle@2-8:isl0>0.8GHz,hbm@4:0.75x",
+)
+
+
+class TestExamples:
+    """Example-based invariants (always run, even without hypothesis)."""
+
+    @pytest.mark.parametrize("spec", SPECS)
+    def test_trace_determinism(self, spec):
+        """Same (spec, seed, shape) -> identical event tuple; a different
+        seed changes only the sampled (mttf) part."""
+        kw = dict(duration_ms=100.0, n_clusters=2, cores_per_cluster=4)
+        a = make_faults(spec, seed=7, **kw)
+        b = make_faults(spec, seed=7, **kw)
+        assert a == b
+        assert a.events == b.events
+        if "mttf" in spec:
+            c = make_faults(spec, seed=8, **kw)
+            assert c.events != a.events
+
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    @pytest.mark.parametrize("kernel", KERNELS)
+    def test_empty_trace_is_identity(self, kernel, strategy):
+        """``faults=FaultTrace.empty()`` must reproduce the fault-free
+        Report bit-for-bit — by construction (the trivial state routes
+        down the historical code path), pinned here per kernel x
+        strategy."""
+        target = Target(strategy=strategy)
+        base = evaluate(kernel, target, total_blocks=13)
+        empty = evaluate(kernel, target, total_blocks=13,
+                         faults=FaultTrace.empty())
+        parsed = evaluate(kernel, target, total_blocks=13,
+                          faults=make_faults(""))
+        assert empty == base
+        assert parsed == base
+
+    @pytest.mark.parametrize("widths", [
+        (64.0,), (8.0, 8.0), (4.0, 16.0, 64.0), (1.0, 1.0, 32.0, 32.0)])
+    def test_fair_shares_monotone_in_port(self, widths):
+        healthy = fair_shares(widths, 64.0)
+        for scale in (0.75, 0.5, 0.25, 0.1):
+            degraded = fair_shares(widths, 64.0 * scale)
+            assert all(d <= h + 1e-12
+                       for d, h in zip(degraded, healthy))
+            assert sum(degraded) <= min(64.0 * scale, sum(widths)) + 1e-9
+
+    def test_fair_shares_never_exceed_width(self):
+        shares = fair_shares((4.0, 16.0, 64.0), 32.0)
+        assert all(s <= w for s, w in zip(shares, (4.0, 16.0, 64.0)))
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestProperties:
+    """Property-based generalizations of the same invariants."""
+
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+           mttf=st.floats(min_value=5.0, max_value=200.0),
+           n_clusters=st.integers(min_value=1, max_value=4),
+           cores=st.integers(min_value=1, max_value=8))
+    @settings(max_examples=40, deadline=None)
+    def test_mttf_trace_replays(self, seed, mttf, n_clusters, cores):
+        """The stochastic sampler is a pure function of (spec, seed,
+        shape): replaying yields the identical event tuple, every victim
+        is in-shape, and events arrive time-sorted."""
+        kw = dict(duration_ms=200.0, n_clusters=n_clusters,
+                  cores_per_cluster=cores)
+        a = make_faults(f"mttf={mttf}ms", seed=seed, **kw)
+        b = make_faults(f"mttf={mttf}ms", seed=seed, **kw)
+        assert a.events == b.events
+        assert all(e.cluster < n_clusters and e.core < cores
+                   for e in a.events)
+        times = [e.t_ms for e in a.events]
+        assert times == sorted(times)
+
+    @given(strategy=st.sampled_from(STRATEGIES),
+           blocks=st.integers(min_value=0, max_value=64))
+    @settings(max_examples=20, deadline=None)
+    def test_empty_trace_identity_over_blocks(self, strategy, blocks):
+        target = Target(strategy=strategy)
+        base = evaluate("expf", target, total_blocks=blocks)
+        empty = evaluate("expf", target, total_blocks=blocks,
+                         faults=FaultTrace.empty())
+        assert empty == base
+
+    @given(widths=st.lists(st.sampled_from(WIDTH_LADDER),
+                           min_size=1, max_size=8),
+           port=st.floats(min_value=0.5, max_value=256.0),
+           scale=st.floats(min_value=0.01, max_value=1.0))
+    @settings(max_examples=80, deadline=None)
+    def test_fair_shares_monotone_under_degradation(self, widths, port,
+                                                    scale):
+        """An HBM window that narrows the port (``hbm@...:<scale>x``)
+        can only shrink every stream's effective bytes/cycle."""
+        widths = tuple(widths)
+        healthy = fair_shares(widths, port)
+        degraded = fair_shares(widths, port * scale)
+        assert all(d <= h + 1e-9 for d, h in zip(degraded, healthy))
+        assert all(0.0 <= s <= w + 1e-9
+                   for s, w in zip(degraded, widths))

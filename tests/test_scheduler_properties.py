@@ -70,11 +70,21 @@ class TestExamples:
         with pytest.raises(ValueError):
             assign(4, ())
         with pytest.raises(ValueError):
-            assign(4, (1.0, 0.0))
-        with pytest.raises(ValueError):
             assign(4, (1.0, -2.0))
         with pytest.raises(ValueError):
             assign(4, (1.0,), "no_such_strategy")
+
+    def test_zero_speed_cores_hold_zero_blocks(self):
+        """Speed 0 marks a dead core (fault injection): it is a valid
+        input, gets zero blocks under every strategy, and only an
+        all-dead cluster with work to place is rejected."""
+        for strategy in STRATEGIES:
+            a = assign(4, (1.0, 0.0), strategy)
+            assert a.blocks_per_core[1] == 0
+            assert sum(a.blocks_per_core) == 4
+        with pytest.raises(ValueError):
+            assign(4, (0.0, 0.0))
+        assert assign(0, (0.0, 0.0)).blocks_per_core == (0, 0)
 
     def test_finish_times_and_weighted_imbalance(self):
         a = assign(12, (2.0, 1.0), "static_proportional")

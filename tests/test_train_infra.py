@@ -201,3 +201,28 @@ class TestStraggler:
             for host in ("a", "b"):
                 mon.record(host, step, 1.0 + 0.01 * rng.random())
         assert not mon.events
+
+    def test_detections_land_in_obs_metrics(self):
+        from repro import obs
+        mon = StragglerMonitor()
+        with obs.session(trace=False, metrics=True) as s:
+            for step in range(16):
+                for host in ("h0", "h1", "h2", "h3"):
+                    dt = 5.0 if host == "h3" and step > 10 else 1.0
+                    mon.record(host, step, dt)
+        m = s.metrics()
+        assert m["train.straggler.detected"]["value"] == len(mon.events) > 0
+        assert m["train.straggler.step_seconds.h3"]["value"] == 5.0
+        assert m["train.straggler.step_seconds.h0"]["value"] == 1.0
+        assert m["train.straggler.last_z.h3"]["value"] > 3.5
+
+    def test_metrics_disabled_is_no_op(self):
+        from repro.obs import metrics as obs_metrics
+        before = obs_metrics.REGISTRY.snapshot()
+        mon = StragglerMonitor()
+        for step in range(16):
+            for host in ("h0", "h1", "h2", "h3"):
+                dt = 5.0 if host == "h3" and step > 10 else 1.0
+                mon.record(host, step, dt)
+        assert mon.events                      # detection still works...
+        assert obs_metrics.REGISTRY.snapshot() == before  # ...silently

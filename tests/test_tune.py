@@ -243,6 +243,36 @@ class TestCache:
             ro.chmod(stat.S_IRWXU)
 
 
+class TestCacheWarm:
+    """``python -m repro.tune.cache --warm``: the warming pass prices
+    through ``Tuner.plan`` itself, so a later ``Tuner.plan`` call is a
+    pure cache hit — byte-identical keys by construction."""
+
+    def test_warm_then_plan_hits(self, tmp_path):
+        from repro.api import Tuner
+        from repro.tune import cache as tune_cache
+
+        p = tmp_path / "warm.json"
+        hits = tune_cache.warm(["expf"], path=p)
+        assert hits == {"expf": False}        # first pass priced it
+        res = Tuner(cache=TuneCache(p)).plan("expf")
+        assert res.from_cache
+        # A second warming pass is itself a pure hit.
+        assert tune_cache.warm(["expf"], path=p) == {"expf": True}
+
+    def test_cli_warm_and_clear(self, tmp_path, capsys):
+        from repro.tune import cache as tune_cache
+
+        p = tmp_path / "warm.json"
+        tune_cache.main(["--warm", "--kernel", "prng", "--path", str(p)])
+        out = capsys.readouterr().out
+        assert "tune.cache.warm,prng,priced" in out
+        assert "1_entries" in out
+        tune_cache.main(["--clear", "--path", str(p)])
+        out = capsys.readouterr().out
+        assert "tune.cache.cleared" in out and "0_entries" in out
+
+
 class TestClusterScope:
     def test_power_cap_respected(self):
         res = tune("expf", cluster=True, power_cap_mw=350.0,
